@@ -1,0 +1,99 @@
+"""Generate the EXPERIMENTS.md tables from results/dryrun artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load():
+    rows = {}
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        r = json.load(open(p))
+        name = os.path.basename(p)[:-5]
+        rows[name] = r
+    return rows
+
+
+def fmt_s(x):
+    return f"{x:9.4f}"
+
+
+def baseline_table(rows, mesh):
+    out = [
+        "| arch | shape | status | compute_s | memory_s | collective_s | "
+        "dominant | MODEL/HLO flops | HBM GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for name, r in sorted(rows.items()):
+        if r.get("mesh") != mesh or "_v" in name or "_flash" in name \
+                or "_fused" in name or r.get("options", {}).get("flash"):
+            continue
+        if any(name.endswith(t) for t in ("_flash", "_sp", "_dots", "_nr",
+                                          "_fused", "_v1")):
+            continue
+        rl = r.get("roofline", {})
+        mem = r.get("memory", {})
+        hbm = mem.get("total_hbm_bytes", 0) / 1e9
+        uf = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['status']} | "
+            f"{rl.get('compute_s', 0):.4f} | {rl.get('memory_s', 0):.4f} | "
+            f"{rl.get('collective_s', 0):.4f} | {rl.get('dominant', '—')} | "
+            f"{uf:.2f} | {hbm:.1f} |"
+            if r["status"] == "ok" else
+            f"| {r['arch']} | {r['shape']} | {r['status']} | — | — | — | — "
+            f"| — | — |")
+    return "\n".join(out)
+
+
+def perf_table(rows, cells):
+    out = [
+        "| cell | config | compute_s | memory_s | collective_s | "
+        "step (max) | vs baseline |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape, mesh, tags in cells:
+        base_key = f"{mesh}_{arch}_{shape}"
+        base = rows.get(base_key)
+        if not base or base["status"] != "ok":
+            continue
+        t0 = base["roofline"]["step_time_s"]
+        for label, key in [("baseline", base_key)] + [
+                (t, f"{mesh}_{arch}_{shape}_{t}") for t in tags]:
+            r = rows.get(key)
+            if not r or r.get("status") != "ok":
+                continue
+            rl = r["roofline"]
+            out.append(
+                f"| {arch} × {shape} ({mesh}) | {label} | "
+                f"{rl['compute_s']:.3f} | {rl['memory_s']:.3f} | "
+                f"{rl['collective_s']:.3f} | {rl['step_time_s']:.3f} | "
+                f"{t0 / rl['step_time_s']:.2f}x |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load()
+    print("### single-pod (16x16 = 256 chips)\n")
+    print(baseline_table(rows, "pod"))
+    print("\n### multi-pod (2x16x16 = 512 chips)\n")
+    print(baseline_table(rows, "multipod"))
+    print("\n### perf iterations\n")
+    cells = [
+        ("glm4-9b", "train_4k", "pod",
+         ["flash", "flash_sp", "flash_sp_dots"]),
+        ("glm4-9b", "train_4k", "multipod",
+         ["v1_v1", "flash_sp", "v1_v1_flash_sp"]),
+        ("falcon-mamba-7b", "train_4k", "pod",
+         ["fused", "fused_dots", "fused_sp", "fused_sp_nr"]),
+        ("llama3.2-3b", "prefill_32k", "pod",
+         ["flash", "flash_sp", "flash_sp_nr"]),
+    ]
+    print(perf_table(rows, cells))
+
+
+if __name__ == "__main__":
+    main()

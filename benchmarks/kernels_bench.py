@@ -1,0 +1,63 @@
+"""Kernel micro-benches: wall time of the Pallas kernels (interpret mode on
+CPU — correctness-shaped timings, not TPU perf) vs their jnp oracles, plus
+the kf_bank fleet-scale batch sweep."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import ops as fa_ops
+from repro.kernels.flash_attn import ref as fa_ref
+from repro.kernels.kf_bank import ops as kf_ops
+from repro.kernels.mamba_scan import ops as ms_ops
+from repro.kernels.mamba_scan import ref as ms_ref
+
+
+def _time(f, *args, reps=3):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def main():
+    print("name,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+
+    # flash attention
+    q = jax.random.normal(key, (1, 512, 4, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 512, 2, 64), jnp.float32)
+    t_kern = _time(lambda: fa_ops.flash_attention(
+        q, k, v, block_q=128, block_k=128))
+    t_ref = _time(lambda: fa_ref.attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3)))
+    print(f"flash_attn_512_interp,{t_kern:.0f},ref={t_ref:.0f}us")
+
+    # mamba scan
+    a = jax.random.uniform(key, (2, 256, 64, 16), jnp.float32, 0.9, 0.999)
+    b = jax.random.normal(key, (2, 256, 64, 16), jnp.float32)
+    h0 = jnp.zeros((2, 64, 16))
+    t_kern = _time(lambda: ms_ops.mamba_chunk_scan(a, b, h0, chunk=64,
+                                                   block_d=64))
+    t_ref = _time(lambda: ms_ref.scan_ref(a, b, h0))
+    print(f"mamba_scan_256_interp,{t_kern:.0f},ref={t_ref:.0f}us")
+
+    # kf bank: fleet sizes (one filter per link x class x pod)
+    for n in (1024, 16384, 131072):
+        x = jnp.zeros((n,))
+        p = jnp.ones((n,))
+        z = jax.random.normal(key, (n, 3))
+        h = jnp.ones((3,))
+        r = jnp.full((3,), 0.2)
+        t = _time(lambda: kf_ops.kf_bank_step(x, p, z, h, r))
+        print(f"kf_bank_{n},{t:.0f},filters_per_s={n / t * 1e6:.2e}")
+
+
+if __name__ == "__main__":
+    main()

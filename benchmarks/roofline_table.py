@@ -1,0 +1,48 @@
+"""Render the roofline table from results/dryrun artifacts (§Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mesh: str = None):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        r = json.load(open(p))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    hdr = (f"{'mesh':9s}{'arch':26s}{'shape':12s}{'status':7s}"
+           f"{'dominant':11s}{'compute_s':>10s}{'memory_s':>10s}"
+           f"{'coll_s':>10s}{'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        rl = r.get("roofline", {})
+        uf = r.get("useful_flops_ratio")
+        print(f"{r['mesh']:9s}{r['arch']:26s}{r['shape']:12s}"
+              f"{r['status']:7s}{rl.get('dominant', '-'):11s}"
+              f"{rl.get('compute_s', 0):10.4f}{rl.get('memory_s', 0):10.4f}"
+              f"{rl.get('collective_s', 0):10.4f}"
+              f"{uf if uf is None else format(uf, '.2f')!s:>7s}")
+    ok = [r for r in rows if r["status"] == "ok"]
+    skip = [r for r in rows if r["status"] == "skip"]
+    err = [r for r in rows if r["status"] == "error"]
+    print(f"\ncells: {len(ok)} ok, {len(skip)} skip "
+          f"(long_500k on full-attention archs), {len(err)} error")
+
+
+if __name__ == "__main__":
+    main()

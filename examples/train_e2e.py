@@ -1,0 +1,77 @@
+"""End-to-end training driver: a ~100M-param llama-family model trained for
+a few hundred steps on the synthetic corpus, with checkpointing, the KF
+scheduler, and restart-safety.
+
+    PYTHONPATH=src python examples/train_e2e.py                # ~25M, 300 steps
+    PYTHONPATH=src python examples/train_e2e.py --size 100m --steps 300
+
+On CPU the 25M config runs ~1 s/step; the 100m config is the same driver
+at ~100M params (use on real accelerators or be patient).  Loss must drop
+substantially from the ~log(V) start — asserted at exit.
+"""
+import argparse
+import math
+
+import jax
+import numpy as np
+
+from repro.data import synthetic
+from repro.dist import sharding
+from repro.launch.mesh import make_host_mesh
+from repro.models.config import ModelConfig
+from repro.train import loop as loop_lib
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+
+SIZES = {
+    # ~25M params: d=384 L=6 H=6 ff=1536 V=8192
+    "25m": ModelConfig(name="e2e-25m", n_layers=6, d_model=384, n_heads=6,
+                       n_kv_heads=2, d_ff=1536, vocab_size=8192,
+                       tie_embeddings=True, remat="none"),
+    # ~100M params: d=768 L=10 H=12 ff=3072 V=16384
+    "100m": ModelConfig(name="e2e-100m", n_layers=10, d_model=768,
+                        n_heads=12, n_kv_heads=4, d_ff=3072,
+                        vocab_size=16384, tie_embeddings=True, remat="none"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="25m", choices=list(SIZES))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = SIZES[args.size]
+    from repro.launch.roofline import count_params
+    n_params = count_params(cfg)
+    print(f"[e2e] {cfg.name}: ~{n_params / 1e6:.0f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq_len}")
+
+    mesh = make_host_mesh()
+    opt_cfg = opt_lib.OptimizerConfig(
+        lr=args.lr, warmup_steps=20, total_steps=args.steps)
+    with sharding.activate(mesh):
+        state, specs_tree = step_lib.init_train_state(
+            jax.random.PRNGKey(0), cfg, opt_cfg)
+        ds = synthetic.make_dataset(cfg, args.seq_len, args.batch)
+        step0 = step_lib.make_train_step(cfg, opt_cfg, mesh=mesh, variant=0)
+        jitted = step_lib.jit_step(step0, mesh, state, specs_tree,
+                                   ds.batch(0))
+        result = loop_lib.run(
+            loop_lib.LoopConfig(total_steps=args.steps,
+                                ckpt_dir=args.ckpt_dir, log_every=25),
+            state, {0: jitted}, ds.batch)
+
+    start, end = result.losses[0], float(np.mean(result.losses[-20:]))
+    print(f"[e2e] loss: {start:.3f} -> {end:.3f} "
+          f"(uniform = ln V = {math.log(cfg.vocab_size):.2f})")
+    assert end < start - 0.5, "loss did not drop — training is broken"
+    print("[e2e] OK — loss dropped substantially")
+
+
+if __name__ == "__main__":
+    main()

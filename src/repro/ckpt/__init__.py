@@ -1,0 +1,1 @@
+"""Checkpointing: atomic sharded save/restore + elastic remesh/reshard."""

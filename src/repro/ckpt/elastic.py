@@ -1,0 +1,75 @@
+"""Elastic scaling: restore a checkpoint onto a DIFFERENT mesh.
+
+Node failures at pod scale shrink the healthy device set; elastic restart
+rebuilds a smaller (or larger) mesh and reshards the checkpoint onto it.
+Because our sharding rules are *logical* (dist/sharding.py), resharding is
+just re-resolving the same logical specs against the new mesh — divisibility
+fallbacks (e.g. a model axis that no longer divides n_kv_heads) degrade to
+replication automatically rather than failing the restart.
+
+`plan_remesh` also implements the straggler policy: given a healthy-device
+count it picks the largest supported mesh shape <= healthy, preferring to
+shrink the data axis first (keeps the model sharding — and therefore the
+compiled executable's per-device shapes — stable across restarts when
+possible).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.ckpt import io as ckpt_io
+from repro.dist import sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    dropped_devices: int
+
+
+def plan_remesh(
+    healthy_devices: int,
+    *,
+    model_parallel: int = 16,
+    multi_pod_threshold: int = 512,
+) -> RemeshPlan:
+    """Largest (pod, data, model) grid that fits the healthy device count."""
+    if healthy_devices < model_parallel:
+        # degenerate: shrink model axis to the largest power of two that fits
+        mp = 1
+        while mp * 2 <= healthy_devices:
+            mp *= 2
+        return RemeshPlan((1, mp), ("data", "model"), healthy_devices - mp)
+    data = healthy_devices // model_parallel
+    if data * model_parallel >= multi_pod_threshold and data % 2 == 0:
+        shape = (2, data // 2, model_parallel)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (data, model_parallel)
+        axes = ("data", "model")
+    used = int(np.prod(shape))
+    return RemeshPlan(tuple(shape), axes, healthy_devices - used)
+
+
+def make_mesh_from_plan(plan: RemeshPlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    used = int(np.prod(plan.shape))
+    grid = np.asarray(devices[:used]).reshape(plan.shape)
+    return Mesh(grid, plan.axes)
+
+
+def elastic_restore(
+    ckpt_dir: str,
+    template: Any,
+    spec_tree: Any,
+    new_mesh: Mesh,
+) -> Optional[tuple[int, Any]]:
+    """Restore newest checkpoint resharded onto `new_mesh` via logical specs."""
+    shardings = sharding.shard_specs(spec_tree, template, new_mesh)
+    return ckpt_io.restore_latest(ckpt_dir, template, shardings=shardings)

@@ -1,0 +1,114 @@
+"""Reconfiguration policy (paper §3.2 deployment rules + §3.3 allocation).
+
+The KF emits a binary signal each epoch.  The policy turns that signal into
+an *applied configuration* under three hysteresis rules:
+
+  1. warmup  — KF decisions are ignored for the first `warmup` cycles
+               (paper: 10,000 cycles after GPU apps start);
+  2. hold    — after any reallocation the configuration is frozen for
+               `hold` cycles (paper: 5,000 cycles);
+  3. revert  — if the boosted state (config=1) persists beyond `revert`
+               cycles, fall back to the equal split (paper: 10,000 cycles).
+
+The same state machine drives (a) the NoC simulator's VC partition + switch
+arbitration and (b) the TPU comm scheduler's compiled-variant selection —
+only the *meaning* of the configuration index differs.
+
+Implemented as a pure jittable function over `PolicyState` so it can live
+inside `lax.scan`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    warmup: int = 10_000     # cycles before the KF may act
+    hold: int = 5_000        # min cycles between reallocations
+    revert: int = 10_000     # max cycles to stay boosted before fallback
+    n_configs: int = 2       # paper uses {0: equal, 1: GPU-boosted}
+
+
+class PolicyState(NamedTuple):
+    config: Array          # () int32 — currently applied configuration
+    last_change: Array     # () int32 — cycle of the last reallocation
+    boosted_since: Array   # () int32 — cycle when config became nonzero (-1 if not)
+
+
+def init_policy_state() -> PolicyState:
+    return PolicyState(
+        config=jnp.int32(0),
+        last_change=jnp.int32(-(10**9)),
+        boosted_since=jnp.int32(-1),
+    )
+
+
+def apply_policy(
+    cfg: PolicyConfig, state: PolicyState, kf_signal: Array, cycle: Array
+) -> PolicyState:
+    """Advance the hysteresis machine by one epoch.
+
+    kf_signal: () int32 in [0, n_configs) — the KF's desired configuration.
+    cycle:     () int32 — current cycle count.
+    """
+    desired = jnp.clip(kf_signal, 0, cfg.n_configs - 1)
+
+    in_warmup = cycle < cfg.warmup
+    in_hold = (cycle - state.last_change) < cfg.hold
+    # revert rule: boosted for too long -> force equal split
+    boosted = state.config > 0
+    over_revert = boosted & (state.boosted_since >= 0) & (
+        (cycle - state.boosted_since) > cfg.revert
+    )
+
+    want = jnp.where(over_revert, jnp.int32(0), desired)
+    blocked = in_warmup | (in_hold & ~over_revert)
+    new_config = jnp.where(blocked, state.config, want)
+
+    changed = new_config != state.config
+    new_last_change = jnp.where(changed, cycle, state.last_change)
+    new_boosted_since = jnp.where(
+        (new_config > 0) & ~boosted,
+        cycle,
+        jnp.where(new_config > 0, state.boosted_since, jnp.int32(-1)),
+    )
+    return PolicyState(
+        config=new_config,
+        last_change=new_last_change,
+        boosted_since=new_boosted_since,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Configuration tables (paper §3.3, Figure 7/8)
+# ---------------------------------------------------------------------------
+
+def vc_partition(config: Array, n_vcs: int = 4) -> tuple[Array, Array]:
+    """Return boolean masks (gpu_vcs, cpu_vcs) over VC indices.
+
+    config=0: GPU {0,1}, CPU {2,3}     (equal split)
+    config=1: GPU {0,1,2}, CPU {3}     (75/25 boost)
+    Generalized to n_vcs: equal split at n/2, boost at n-1.
+    """
+    idx = jnp.arange(n_vcs)
+    gpu_hi = jnp.where(config > 0, n_vcs - 1, n_vcs // 2)  # exclusive bound
+    gpu_mask = idx < gpu_hi
+    return gpu_mask, ~gpu_mask
+
+
+def sa_priority_pattern(config: Array, phase: Array) -> Array:
+    """Switch-arbitration class preference for this cycle.
+
+    Returns the preferred class (0=CPU, 1=GPU) given the 3-phase pattern.
+    config=0: round-robin (no class preference — encoded as -1).
+    config=1: GPU, GPU, CPU repeating (paper Fig. 8).
+    """
+    pattern = jnp.asarray([1, 1, 0], dtype=jnp.int32)[phase % 3]
+    return jnp.where(config > 0, pattern, jnp.int32(-1))

@@ -1,0 +1,190 @@
+"""Kalman Filter (paper Eqs. 1-5), JAX-native.
+
+The paper uses a scalar state (next-epoch GPU IPC trend) observed through a
+3-vector of normalized NoC counters.  We implement the general linear KF
+
+    time update:         x^_k = A x_{k-1} + B u_{k-1}           (Eq. 1)
+                         P^_k = A P_{k-1} A^T + Q               (Eq. 2)
+    measurement update:  K_k  = P^_k H^T (H P^_k H^T + R)^-1    (Eq. 3)
+                         x_k  = x^_k + K_k (z_k - H x^_k)       (Eq. 4)
+                         P_k  = (I - K_k H) P^_k                (Eq. 5)
+
+as a pure function over a `KalmanState` pytree, plus a batched variant
+(`vmap`) used to run one filter per router/link/traffic-class, and a
+`lax.scan` driver for offline trace filtering.  Everything is jittable and
+dtype-polymorphic (fp32 default).
+
+Notes
+-----
+* Eq. 5 in the paper text is written `(I - K_k) P^_k`; for a non-square H
+  the dimensionally correct Joseph-free form is `(I - K_k H) P^_k`, which is
+  what the paper's scalar-state/3-obs setup requires (K_k is n x m).  We use
+  `(I - K_k H)`.
+* The measurement-space solve uses `jnp.linalg.solve` rather than an explicit
+  inverse for numerical robustness; for m = 1 this reduces to a scalar
+  divide that XLA folds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class KalmanState(NamedTuple):
+    """Posterior state estimate and error covariance (paper: X_k, P_k)."""
+
+    x: Array  # (n,)   posterior state estimate
+    p: Array  # (n, n) posterior error covariance
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KalmanParams:
+    """Model matrices. Shapes: A (n,n), B (n,u), H (m,n), Q (n,n), R (m,m)."""
+
+    a: Array
+    b: Array
+    h: Array
+    q: Array
+    r: Array
+
+    @property
+    def state_dim(self) -> int:
+        return self.a.shape[0]
+
+    @property
+    def obs_dim(self) -> int:
+        return self.h.shape[0]
+
+
+def init_state(n: int, p0: float = 1.0, dtype=jnp.float32) -> KalmanState:
+    return KalmanState(x=jnp.zeros((n,), dtype), p=jnp.eye(n, dtype=dtype) * p0)
+
+
+def make_params(
+    a, b, h, q, r, dtype=jnp.float32
+) -> KalmanParams:  # convenience, accepts scalars / lists
+    a = jnp.atleast_2d(jnp.asarray(a, dtype))
+    b = jnp.atleast_2d(jnp.asarray(b, dtype))
+    h = jnp.atleast_2d(jnp.asarray(h, dtype))
+    q = jnp.atleast_2d(jnp.asarray(q, dtype))
+    r = jnp.atleast_2d(jnp.asarray(r, dtype))
+    return KalmanParams(a=a, b=b, h=h, q=q, r=r)
+
+
+def time_update(params: KalmanParams, state: KalmanState, u: Array | None = None):
+    """Eqs. (1)-(2): a-priori estimate (x^_k, P^_k)."""
+    x, p = state
+    x_prior = params.a @ x
+    if u is not None:
+        x_prior = x_prior + params.b @ u
+    p_prior = params.a @ p @ params.a.T + params.q
+    return KalmanState(x=x_prior, p=p_prior)
+
+
+def measurement_update(params: KalmanParams, prior: KalmanState, z: Array):
+    """Eqs. (3)-(5): posterior (x_k, P_k) given observation z (m,)."""
+    x_prior, p_prior = prior
+    h = params.h
+    # S = H P^ H^T + R  (innovation covariance, m x m)
+    s = h @ p_prior @ h.T + params.r
+    # K = P^ H^T S^-1  solved as S^T K^T = H P^T  (S symmetric)
+    k = jnp.linalg.solve(s, h @ p_prior.T).T  # (n, m)
+    innovation = z - h @ x_prior
+    x_post = x_prior + k @ innovation
+    n = params.state_dim
+    p_post = (jnp.eye(n, dtype=p_prior.dtype) - k @ h) @ p_prior
+    # symmetrize to fight drift in long scans
+    p_post = 0.5 * (p_post + p_post.T)
+    return KalmanState(x=x_post, p=p_post), innovation
+
+
+def step(
+    params: KalmanParams,
+    state: KalmanState,
+    z: Array,
+    u: Array | None = None,
+):
+    """One full predict+correct cycle. Returns (posterior, prior, innovation)."""
+    prior = time_update(params, state, u)
+    posterior, innovation = measurement_update(params, prior, z)
+    return posterior, prior, innovation
+
+
+@partial(jax.jit, static_argnames=())
+def filter_trace(params: KalmanParams, state0: KalmanState, zs: Array):
+    """Run the KF along a trace `zs` of shape (T, m) via lax.scan.
+
+    Returns (final_state, (xs_post, xs_prior)) where xs_* have shape (T, n).
+    """
+
+    def body(state, z):
+        post, prior, _ = step(params, state, z)
+        return post, (post.x, prior.x)
+
+    return jax.lax.scan(body, state0, zs)
+
+
+# ---------------------------------------------------------------------------
+# Batched bank of independent filters (one per router / link / traffic class).
+# Used by the NoC simulator (36 routers) and by the fleet-scale comm scheduler
+# (one per pod x traffic-class).  The Pallas kernel in repro.kernels.kf_bank
+# implements the same contract for TPU; this is the jnp oracle it is tested
+# against.
+# ---------------------------------------------------------------------------
+
+batched_step = jax.vmap(step, in_axes=(None, 0, 0, None))
+
+
+def batched_filter_trace(params: KalmanParams, states0: KalmanState, zs: Array):
+    """zs: (T, B, m); states0 leaves have leading batch dim B."""
+
+    def body(states, z):
+        post, prior, _ = batched_step(params, states, z, None)
+        return post, (post.x, prior.x)
+
+    return jax.lax.scan(body, states0, zs)
+
+
+# ---------------------------------------------------------------------------
+# Paper-specific instantiation: scalar IPC-trend state, 3 NoC observations.
+# ---------------------------------------------------------------------------
+
+def paper_params(
+    q: float = 1e-3,
+    r: float = 1e-1,
+    h: tuple[float, float, float] = (1.0, 1.0, 1.0),
+    dtype=jnp.float32,
+) -> KalmanParams:
+    """KF for the paper's setup.
+
+    State x = normalized GPU IPC *pressure* in [-1, 1] (positive => IPC will
+    decline => allocate more resources to GPUs).  Observations z =
+    [GPU_Stall_Dramfull, GPU_Icnt_Push, GPU_Stall_Icnt-Shader], each
+    normalized to [-1, 1].  Random-walk state model (A = 1, no control).
+    """
+    return KalmanParams(
+        a=jnp.eye(1, dtype=dtype),
+        b=jnp.zeros((1, 1), dtype),
+        h=jnp.asarray(h, dtype).reshape(3, 1),
+        q=jnp.eye(1, dtype=dtype) * q,
+        r=jnp.eye(3, dtype=dtype) * r,
+    )
+
+
+def normalize_observations(raw: Array, lo: Array, hi: Array) -> Array:
+    """Scale raw counters into [-1, 1] (paper §3.2 preprocessing)."""
+    mid = 0.5 * (hi + lo)
+    half = jnp.maximum(0.5 * (hi - lo), 1e-9)
+    return jnp.clip((raw - mid) / half, -1.0, 1.0)
+
+
+def binarize(x_post: Array, threshold: float = 0.0) -> Array:
+    """Paper §3.2: KF output > 0 => IPC will decline => reconfigure (1)."""
+    return (x_post > threshold).astype(jnp.int32)

@@ -1,0 +1,4 @@
+from repro.core.noc.topology import Topology, make_topology
+from repro.core.noc.sim import NoCConfig, SimResult, simulate
+
+__all__ = ["Topology", "make_topology", "NoCConfig", "SimResult", "simulate"]

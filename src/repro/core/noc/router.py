@@ -1,0 +1,280 @@
+"""Flit-level router microarchitecture, fully vectorized over routers.
+
+Models one subnet of the paper's network (Fig. 6): per-input-port VC FIFOs
+with credit flow control, XY routing, VC allocation at the downstream router
+constrained by the class partition (Fig. 7), and switch allocation that is
+either round-robin or the KF-triggered 2:1 GPU-priority pattern (Fig. 8).
+
+State layout (one subnet):
+  buf_dest / buf_src / buf_cls / buf_birth : (R, P, V, B) int32 ring FIFOs
+  head, count                              : (R, P, V)    int32
+  rr_ptr                                   : (R, P)       int32  per-output RR pointer
+
+All packets are single-flit (DESIGN.md §8.2); B is the per-VC buffer depth
+(paper: 4).  One traversal per output port and at most one per input port per
+cycle (a crossbar has one input per port).
+
+The cycle function is pure: (state, masks, rng) -> (state, events); `sim.py`
+wraps it in `lax.scan`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.noc.topology import N_PORTS, PORT_L, Topology
+
+Array = jax.Array
+BIG = jnp.int32(1 << 20)
+
+
+class SubnetState(NamedTuple):
+    buf_dest: Array   # (R, P, V, B)
+    buf_src: Array
+    buf_cls: Array
+    buf_birth: Array  # generation timestamp (round-trip latency)
+    buf_binj: Array   # injection timestamp (network latency, Fig. 11)
+    head: Array       # (R, P, V)
+    count: Array      # (R, P, V)
+    rr_ptr: Array     # (R, P) round-robin pointer over P*V requester index
+
+
+def init_subnet(n_routers: int, n_vcs: int, depth: int) -> SubnetState:
+    shape = (n_routers, N_PORTS, n_vcs, depth)
+    z4 = jnp.zeros(shape, dtype=jnp.int32)
+    z3 = jnp.zeros(shape[:3], dtype=jnp.int32)
+    return SubnetState(
+        buf_dest=z4, buf_src=z4, buf_cls=z4, buf_birth=z4, buf_binj=z4,
+        head=z3, count=z3, rr_ptr=jnp.zeros((n_routers, N_PORTS), jnp.int32),
+    )
+
+
+class CycleEvents(NamedTuple):
+    """Per-cycle outputs consumed by metrics / the MC model."""
+
+    # ejected-at-local packets, one slot per router (<=1 ejection/router/cycle)
+    eject_valid: Array   # (R,) bool
+    eject_dest: Array    # (R,) int32 (== router id when valid)
+    eject_src: Array     # (R,)
+    eject_cls: Array     # (R,)
+    eject_birth: Array   # (R,) generation timestamp
+    eject_binj: Array    # (R,) injection timestamp
+    moved: Array         # () int32 — switch traversals this cycle (utilization)
+    dram_block_gpu: Array  # () int32 — GPU ejections blocked by a full MC queue
+    dram_block_cpu: Array  # () int32 — CPU ejections blocked by a full MC queue
+
+
+def _peek_heads(state: SubnetState):
+    """Gather head-of-line packet fields -> (R, P, V) each + validity."""
+    idx = state.head[..., None]  # (R,P,V,1)
+    dest = jnp.take_along_axis(state.buf_dest, idx, axis=3)[..., 0]
+    src = jnp.take_along_axis(state.buf_src, idx, axis=3)[..., 0]
+    cls = jnp.take_along_axis(state.buf_cls, idx, axis=3)[..., 0]
+    birth = jnp.take_along_axis(state.buf_birth, idx, axis=3)[..., 0]
+    binj = jnp.take_along_axis(state.buf_binj, idx, axis=3)[..., 0]
+    valid = state.count > 0
+    return dest, src, cls, birth, binj, valid
+
+
+def _dequeue(state: SubnetState, deq_mask: Array) -> SubnetState:
+    """deq_mask: (R, P, V) bool — pop head where True."""
+    depth = state.buf_dest.shape[3]
+    new_head = jnp.where(deq_mask, (state.head + 1) % depth, state.head)
+    new_count = state.count - deq_mask.astype(jnp.int32)
+    return state._replace(head=new_head, count=new_count)
+
+
+def _enqueue_at(
+    state: SubnetState,
+    r: Array, p: Array, v: Array,          # (K,) flat target coordinates
+    dest: Array, src: Array, cls: Array, birth: Array, binj: Array,
+    valid: Array,                           # (K,) bool
+) -> SubnetState:
+    """Scatter-enqueue K packets at (r, p, v). Targets are unique when valid."""
+    depth = state.buf_dest.shape[3]
+    tail = (state.head[r, p, v] + state.count[r, p, v]) % depth
+    # invalid writes get an out-of-bounds slot index: JAX scatter drops them,
+    # so they can never race with a valid write to the same FIFO slot.
+    tail = jnp.where(valid, tail, depth)
+
+    def scat(buf, val):
+        return buf.at[r, p, v, tail].set(val, mode="drop")
+
+    state = state._replace(
+        buf_dest=scat(state.buf_dest, dest),
+        buf_src=scat(state.buf_src, src),
+        buf_cls=scat(state.buf_cls, cls),
+        buf_birth=scat(state.buf_birth, birth),
+        buf_binj=scat(state.buf_binj, binj),
+        count=state.count.at[r, p, v].add(valid.astype(jnp.int32)),
+    )
+    return state
+
+
+def free_vc_for_class(
+    count: Array, cls_allowed_mask: Array, depth: int
+) -> tuple[Array, Array]:
+    """Pick the lowest-index allowed VC with space at each (R, P).
+
+    count: (R, P, V); cls_allowed_mask: (R, P, V) bool (class partition).
+    Returns (vc_index (R,P) int32, available (R,P) bool).
+    """
+    has_space = (count < depth) & cls_allowed_mask
+    vc = jnp.argmax(has_space, axis=-1).astype(jnp.int32)
+    return vc, jnp.any(has_space, axis=-1)
+
+
+def router_cycle(
+    state: SubnetState,
+    topo_route: Array,      # (R, R) int32 device copy of topology.route
+    topo_neighbor: Array,   # (R, P)
+    topo_opposite: Array,   # (P,)
+    gpu_vc_mask: Array,     # (V,) bool — VCs GPU packets may occupy
+    cpu_vc_mask: Array,     # (V,) bool
+    sa_pref_class: Array,   # () int32: -1 round-robin, else preferred class
+    mc_can_accept: Array,   # (R,) bool — ejection credit at local sink
+    active: Array,          # () bool — link active this cycle (4-subnet: half width)
+) -> tuple[SubnetState, CycleEvents]:
+    R, P, V, B = state.buf_dest.shape
+    dest, src, cls, birth, binj, valid = _peek_heads(state)  # (R,P,V)
+
+    # --- route computation: desired output port of each head packet
+    out_port = topo_route[jnp.arange(R)[:, None, None], dest]   # (R,P,V)
+
+    # --- switch allocation: per (router, out_port), pick one (in_port, vc)
+    flat = valid.reshape(R, P * V)
+    flat_cls = cls.reshape(R, P * V)
+    req = jnp.zeros((R, P * V, N_PORTS), bool).at[
+        jnp.arange(R)[:, None], jnp.arange(P * V)[None, :],
+        out_port.reshape(R, P * V),
+    ].set(flat)
+
+    # round-robin key relative to per-output pointer
+    idx = jnp.arange(P * V, dtype=jnp.int32)
+    key = (idx[None, :, None] - state.rr_ptr[:, None, :]) % (P * V)  # (R,PV,O)
+    # KF=1: prefer the pattern class first (paper Fig. 8, 2 GPU : 1 CPU)
+    is_pref = (flat_cls[:, :, None] == sa_pref_class) | (sa_pref_class < 0)
+    key = key + jnp.where(is_pref, 0, P * V)
+    key = jnp.where(req, key, BIG)
+    winner = jnp.argmin(key, axis=1).astype(jnp.int32)            # (R, O)
+    any_req = jnp.any(req, axis=1)                                 # (R, O)
+
+    # --- output-side credit checks
+    out_ids = jnp.arange(N_PORTS)
+    w_cls = flat_cls[jnp.arange(R)[:, None], winner]               # (R, O)
+    down_r = topo_neighbor[jnp.arange(R)[:, None], out_ids[None, :]]  # (R,O)
+    down_p = topo_opposite[out_ids][None, :].astype(jnp.int32)     # (1, O) -> bcast
+    down_r_safe = jnp.maximum(down_r, 0)
+
+    allowed = jnp.where(w_cls[..., None] == 1, gpu_vc_mask[None, None, :],
+                        cpu_vc_mask[None, None, :])                # (R,O,V)
+    down_count = state.count[down_r_safe, jnp.broadcast_to(down_p, down_r.shape)]
+    has_space = (down_count < B) & allowed                         # (R,O,V)
+    down_vc = jnp.argmax(has_space, axis=-1).astype(jnp.int32)
+    credit_ok = jnp.any(has_space, axis=-1)                        # (R,O)
+
+    is_local = out_ids[None, :] == PORT_L
+    # local ejection needs the sink (node / MC queue) to accept
+    eject_ok = is_local & mc_can_accept[:, None]
+    link_ok = (~is_local) & (down_r >= 0) & credit_ok
+    grant = any_req & (eject_ok | link_ok) & active                # (R,O)
+
+    # --- one traversal per input port: keep the lowest-output grant per port
+    w_port = winner // V                                           # (R,O)
+    o_rank = jnp.arange(N_PORTS)[None, :].astype(jnp.int32)
+    rank = jnp.where(grant, o_rank, BIG)
+    # min output index per (router, input port)
+    min_rank = jnp.full((R, N_PORTS), BIG, jnp.int32).at[
+        jnp.arange(R)[:, None], w_port
+    ].min(rank)
+    grant = grant & (rank == min_rank[jnp.arange(R)[:, None], w_port])
+
+    # --- apply: dequeue winners
+    deq = jnp.zeros((R, P * V), bool).at[
+        jnp.arange(R)[:, None], winner
+    ].max(grant)
+    state2 = _dequeue(state, deq.reshape(R, P, V))
+
+    # advance RR pointer past the winner on granted outputs
+    new_ptr = jnp.where(grant, (winner + 1) % (P * V), state.rr_ptr)
+    state2 = state2._replace(rr_ptr=new_ptr)
+
+    # --- gather winner packet fields (R, O)
+    def g(x):
+        return x.reshape(R, P * V)[jnp.arange(R)[:, None], winner]
+
+    wd, ws, wc, wb = g(dest), g(src), g(cls), g(birth)
+    wj = g(binj)
+
+    # --- ejections (out_port == Local): <= 1 per router by construction
+    ej = grant & is_local
+    eject_valid = jnp.any(ej, axis=1)
+    ej_slot = jnp.argmax(ej, axis=1)
+    ar = jnp.arange(R)
+    # dramfull stalls: a head packet wants to eject but the sink is full
+    blocked_local = any_req & is_local & ~mc_can_accept[:, None]
+    events = CycleEvents(
+        eject_valid=eject_valid,
+        eject_dest=wd[ar, ej_slot],
+        eject_src=ws[ar, ej_slot],
+        eject_cls=wc[ar, ej_slot],
+        eject_birth=wb[ar, ej_slot],
+        eject_binj=wj[ar, ej_slot],
+        moved=jnp.sum(grant.astype(jnp.int32)),
+        dram_block_gpu=jnp.sum((blocked_local & (w_cls == 1)).astype(jnp.int32)),
+        dram_block_cpu=jnp.sum((blocked_local & (w_cls == 0)).astype(jnp.int32)),
+    )
+
+    # --- link traversals: enqueue at downstream (r', opposite port, chosen vc)
+    lk = (grant & ~is_local).reshape(-1)
+    state3 = _enqueue_at(
+        state2,
+        down_r_safe.reshape(-1),
+        jnp.broadcast_to(down_p, down_r.shape).reshape(-1),
+        down_vc.reshape(-1),
+        wd.reshape(-1), ws.reshape(-1), wc.reshape(-1), wb.reshape(-1),
+        wj.reshape(-1),
+        lk,
+    )
+    return state3, events
+
+
+def inject(
+    state: SubnetState,
+    r_ids: Array,        # (K,) routers attempting one injection each
+    want: Array,         # (K,) bool
+    dest: Array, src: Array, cls: Array, birth: Array, binj: Array,
+    gpu_vc_mask: Array, cpu_vc_mask: Array,
+) -> tuple[SubnetState, Array]:
+    """Inject at the Local input port, honoring the class VC partition.
+
+    Returns (state, accepted (K,) bool).  r_ids must be unique (one attempt
+    per router per cycle — sources queue internally otherwise).
+    """
+    V = state.count.shape[2]
+    B = state.buf_dest.shape[3]
+    local_count = state.count[r_ids, PORT_L]                       # (K, V)
+    allowed = jnp.where(cls[:, None] == 1, gpu_vc_mask[None, :],
+                        cpu_vc_mask[None, :])
+    has_space = (local_count < B) & allowed
+    vc = jnp.argmax(has_space, axis=-1).astype(jnp.int32)
+    ok = want & jnp.any(has_space, axis=-1)
+    state = _enqueue_at(
+        state, r_ids, jnp.full_like(r_ids, PORT_L), vc,
+        dest, src, cls, birth, binj, ok,
+    )
+    return state, ok
+
+
+def device_tables(topo: Topology):
+    """Move topology tables onto device once per simulation."""
+    return (
+        jnp.asarray(topo.route),
+        jnp.asarray(topo.neighbor),
+        jnp.asarray(topo.opposite),
+        jnp.asarray(topo.node_type),
+        jnp.asarray(topo.mc_ids),
+    )

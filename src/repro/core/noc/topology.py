@@ -1,0 +1,115 @@
+"""6x6 mesh topology, XY routing tables, node-type placement (paper Table 1).
+
+Everything here is precomputed with numpy into constant int32 tables that the
+jitted cycle loop indexes with gathers — no control flow at trace time.
+
+Ports: 0=N, 1=E, 2=S, 3=W, 4=Local.  Router id r = y * W + x.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+N_PORTS = 5
+PORT_N, PORT_E, PORT_S, PORT_W, PORT_L = range(5)
+OPPOSITE = np.array([PORT_S, PORT_W, PORT_N, PORT_E, PORT_L], dtype=np.int32)
+
+# node types
+NT_CPU, NT_GPU, NT_MC = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    width: int
+    height: int
+    n_routers: int
+    # (R, R) int32: output port at router i for a packet destined to j (XY).
+    route: np.ndarray
+    # (R, P) int32: neighbor router id through port p (-1 if none/local).
+    neighbor: np.ndarray
+    # (P,) int32: the input port on the downstream router for our output port.
+    opposite: np.ndarray
+    # (R,) int32 node type per router: 0=CPU, 1=GPU, 2=MC.
+    node_type: np.ndarray
+    # (n_mc,) router ids hosting memory controllers.
+    mc_ids: np.ndarray
+
+
+def _xy_route(width: int, height: int) -> np.ndarray:
+    n = width * height
+    route = np.full((n, n), PORT_L, dtype=np.int32)
+    for src in range(n):
+        sx, sy = src % width, src // width
+        for dst in range(n):
+            dx, dy = dst % width, dst // width
+            if dx > sx:
+                route[src, dst] = PORT_E
+            elif dx < sx:
+                route[src, dst] = PORT_W
+            elif dy > sy:
+                route[src, dst] = PORT_S
+            elif dy < sy:
+                route[src, dst] = PORT_N
+            else:
+                route[src, dst] = PORT_L
+    return route
+
+
+def _neighbors(width: int, height: int) -> np.ndarray:
+    n = width * height
+    nb = np.full((n, N_PORTS), -1, dtype=np.int32)
+    for r in range(n):
+        x, y = r % width, r // width
+        if y > 0:
+            nb[r, PORT_N] = r - width
+        if x < width - 1:
+            nb[r, PORT_E] = r + 1
+        if y < height - 1:
+            nb[r, PORT_S] = r + width
+        if x > 0:
+            nb[r, PORT_W] = r - 1
+    return nb
+
+
+def make_topology(width: int = 6, height: int = 6, n_mc: int = 8) -> Topology:
+    """Paper Table 1: 6x6 shared 2D mesh; 8 GDDR5 MCs; CPU/GPU chiplet tiles.
+
+    MCs sit on the top and bottom rows (the usual GPGPU-sim placement);
+    remaining tiles alternate GPU / CPU chiplets (14 + 14 on the 6x6).
+    """
+    n = width * height
+    node_type = np.empty((n,), dtype=np.int32)
+    # spread MCs evenly over top and bottom rows
+    per_row = n_mc // 2
+    top_cols = np.linspace(0, width - 1, per_row).round().astype(int)
+    bot_cols = np.linspace(0, width - 1, n_mc - per_row).round().astype(int)
+    mc_ids = sorted(
+        {int(c) for c in top_cols} | {int((height - 1) * width + c) for c in bot_cols}
+    )
+    # if rounding collided, fill from row 0 leftovers deterministically
+    i = 0
+    while len(mc_ids) < n_mc:
+        if i not in mc_ids:
+            mc_ids.append(i)
+        i += 1
+    mc_ids = np.asarray(sorted(mc_ids[:n_mc]), dtype=np.int32)
+
+    flip = 0
+    for r in range(n):
+        if r in mc_ids:
+            node_type[r] = NT_MC
+        else:
+            node_type[r] = NT_GPU if flip else NT_CPU
+            flip ^= 1
+
+    return Topology(
+        width=width,
+        height=height,
+        n_routers=n,
+        route=_xy_route(width, height),
+        neighbor=_neighbors(width, height),
+        opposite=OPPOSITE,
+        node_type=node_type,
+        mc_ids=mc_ids,
+    )

@@ -1,0 +1,1 @@
+"""Data pipeline: deterministic synthetic corpus + host-side prefetch."""

@@ -1,0 +1,51 @@
+"""Host-side prefetcher: overlaps batch synthesis/IO with device compute.
+
+A small background thread keeps `depth` batches ahead of the training loop
+(the latency-sensitive 'CPU-class' traffic stream in the KF scheduler's
+terms — see dist/kf_scheduler.py).  On real multi-host topologies each host
+prefetches only its data-parallel shard; here the shard is the full batch.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+
+class Prefetcher:
+    def __init__(self, make_batch: Callable[[int], dict], depth: int = 2,
+                 start_step: int = 0):
+        self._make = make_batch
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._next = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while not self._stop.is_set():
+            step = self._next
+            batch = self._make(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            self._next = step + 1
+
+    def get(self) -> tuple[int, dict]:
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        while True:
+            yield self.get()

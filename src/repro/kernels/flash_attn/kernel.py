@@ -1,0 +1,157 @@
+"""Pallas TPU flash attention: online-softmax tiling over KV blocks.
+
+Grid (B, H, nQ, nK) — the LAST axis iterates sequentially on TPU, so the
+online-softmax running max / denominator / accumulator live in VMEM scratch
+carried across KV iterations; the output tile is written once at ik == nK-1.
+
+VMEM working set per grid step (defaults TQ=TK=512, D=128, bf16 in / fp32
+acc):  q 128 KiB + k 128 KiB + v 128 KiB + acc 256 KiB + m/l 512 KiB
+≈ 1.2 MiB — comfortably inside the ~16 MiB v5e VMEM budget, with MXU-aligned
+(multiple-of-128) matmul dims.
+
+Causal and sliding-window block skipping happens at two levels: fully-masked
+blocks are skipped via `pl.when` (no MXU work issued), partially-masked
+blocks apply an element mask.  GQA is handled by the k/v index_map mapping
+query-head h to kv-head h // (H // KV) — repeated KV is never materialized.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+MIN_LANE = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,            # (1, 1, TQ, D), (1, 1, TK, D) x2
+    o_ref,                          # (1, 1, TQ, D)
+    m_scr, l_scr, acc_scr,          # VMEM scratch: (TQ, 128), (TQ, 128), (TQ, D)
+    *,
+    causal: bool,
+    window: int | None,
+    logit_cap: float | None,
+    kv_len: int,
+    block_q: int,
+    block_k: int,
+    n_k: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # --- block-level skip tests (static grid, dynamic predicate) ---
+    run = True
+    if causal:
+        # block fully above the diagonal -> no valid (q, k) pair
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        # block fully left of every query's window -> skip
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (TQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (TK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        d = q.shape[-1]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) / math.sqrt(d)                              # (TQ, TK)
+        if logit_cap is not None:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]                         # (TQ, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (TQ, TK)
+        corr = jnp.exp(m_prev - m_new)                # (TQ, 1)
+        l_new = l_scr[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        safe = jnp.where(l == 0.0, 1.0, l)            # fully-masked rows -> 0
+        o_ref[0, 0, ...] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, KV, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    kv_len: int | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    assert h % kvh == 0
+    rep = h // kvh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    n_q, n_k = sq // block_q, sk // block_k
+    kv_len = sk if kv_len is None else kv_len
+
+    grid = (b, h, n_q, n_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal, window=window, logit_cap=logit_cap,
+        kv_len=kv_len, block_q=block_q, block_k=block_k, n_k=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h_, iq, ik: (b_, h_ // rep, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda b_, h_, iq, ik: (b_, h_ // rep, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, MIN_LANE), jnp.float32),
+            pltpu.VMEM((block_q, MIN_LANE), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,59 @@
+"""Jit'd public wrapper: model layout (B, S, H, D) -> kernel layout, padding,
+backend dispatch (Pallas-compiled on TPU, interpret=True elsewhere)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_cap", "block_q", "block_k"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, D) — model layout
+    k: jax.Array,  # (B, Sk, KV, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    sq, sk = q.shape[1], k.shape[1]
+    qt = _pad_to(q.transpose(0, 2, 1, 3), 2, min(block_q, 128))
+    kt = _pad_to(k.transpose(0, 2, 1, 3), 2, min(block_k, 128))
+    vt = _pad_to(v.transpose(0, 2, 1, 3), 2, min(block_k, 128))
+    bq = min(block_q, qt.shape[2])
+    bk = min(block_k, kt.shape[2])
+    # shrink block until it divides (padding guarantees divisibility by 128)
+    while qt.shape[2] % bq:
+        bq //= 2
+    while kt.shape[2] % bk:
+        bk //= 2
+    out = flash_attention_kernel(
+        qt, kt, vt,
+        causal=causal, window=window, logit_cap=logit_cap,
+        kv_len=sk, block_q=bq, block_k=bk,
+        interpret=_interpret(),
+    )
+    return out[:, :, :sq].transpose(0, 2, 1, 3)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash attention kernel ((B, H, S, D) layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, KV, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    kv_len: int | None = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    rep = h // kvh
+    kv_len = sk if kv_len is None else kv_len
+    kr = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr) / jnp.sqrt(d)
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = k_pos < kv_len
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows give uniform p; zero them like the kernel does
+    any_valid = jnp.any(mask, axis=-1)                        # (Sq,)
+    p = jnp.where(any_valid[None, None, :, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)

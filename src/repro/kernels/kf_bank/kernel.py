@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: a BANK of independent scalar-state Kalman Filters.
+
+The paper runs ONE filter (scalar IPC-trend state, 3 NoC counters).  At
+fleet scale the same predictor runs per link x traffic-class x pod — tens of
+thousands of concurrent filters advancing in lock-step each telemetry epoch.
+This kernel advances B filters one predict+correct cycle.
+
+TPU adaptation (DESIGN.md §3): the textbook measurement update (paper
+Eqs. 3–5) needs an m x m innovation-covariance solve per filter — scalar
+gather/solve chains that would serialize on the VPU.  For a scalar state
+with diagonal R the measurement update has an exactly equivalent
+*information-filter* form:
+
+    1/p_k  = 1/p^_k + sum_m h_m^2 / r_m
+    x_k    = p_k * (x^_k / p^_k + sum_m h_m z_m / r_m)
+
+which is pure elementwise arithmetic + a tiny sum over m: filters ride the
+128-wide lanes, observations ride sublanes.  Algebraic equivalence to
+Eqs. 3–5 is asserted in tests against `repro.core.kalman` (the paper-form
+oracle).
+
+Layout: z (M, B) with B on lanes; x, p (1, B); h, r (M, 1) broadcast.
+Grid tiles B in TB-lane blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kf_bank_kernel(
+    x_ref, p_ref, z_ref, h_ref, r_ref,   # (1,TB) (1,TB) (M,TB) (M,1) (M,1)
+    x_out, p_out,                         # (1, TB) each
+    *,
+    a: float,
+    q: float,
+):
+    x = x_ref[...]
+    p = p_ref[...]
+    z = z_ref[...]
+    h = h_ref[...]
+    r = r_ref[...]
+
+    # time update (Eqs. 1-2), scalar state
+    x_prior = a * x
+    p_prior = a * a * p + q
+
+    # measurement update in information form (== Eqs. 3-5 for n=1, diag R)
+    hr = h / r                                  # (M, 1)
+    info = jnp.sum(h * hr, axis=0, keepdims=True)          # sum h^2/r  (1,1)
+    p_post = 1.0 / (1.0 / p_prior + info)                  # (1, TB)
+    innov = jnp.sum(hr * z, axis=0, keepdims=True)         # sum h z / r (1,TB)
+    x_post = p_post * (x_prior / p_prior + innov)
+
+    x_out[...] = x_post
+    p_out[...] = p_post
+
+
+def kf_bank_kernel(
+    x: jax.Array,   # (B,) fp32 posterior state estimates
+    p: jax.Array,   # (B,) fp32 posterior variances
+    z: jax.Array,   # (B, M) fp32 observations
+    h: jax.Array,   # (M,) observation model
+    r: jax.Array,   # (M,) diagonal observation noise
+    *,
+    a: float = 1.0,
+    q: float = 1e-3,
+    block_b: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    b, m = z.shape
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    n_b = b // block_b
+
+    xs = x.reshape(1, b)
+    ps = p.reshape(1, b)
+    zs = z.T.reshape(m, b)
+    hs = h.reshape(m, 1).astype(jnp.float32)
+    rs = r.reshape(m, 1).astype(jnp.float32)
+
+    kernel = functools.partial(_kf_bank_kernel, a=a, q=q)
+    x_new, p_new = pl.pallas_call(
+        kernel,
+        grid=(n_b,),
+        in_specs=[
+            pl.BlockSpec((1, block_b), lambda i: (0, i)),
+            pl.BlockSpec((1, block_b), lambda i: (0, i)),
+            pl.BlockSpec((m, block_b), lambda i: (0, i)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_b), lambda i: (0, i)),
+            pl.BlockSpec((1, block_b), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, b), jnp.float32),
+            jax.ShapeDtypeStruct((1, b), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xs, ps, zs, hs, rs)
+    return x_new.reshape(b), p_new.reshape(b)

@@ -1,0 +1,38 @@
+"""Jit'd wrapper for the KF-bank kernel with padding + backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kf_bank.kernel import kf_bank_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("a", "q", "block_b"))
+def kf_bank_step(
+    x: jax.Array,   # (B,) states
+    p: jax.Array,   # (B,) variances
+    z: jax.Array,   # (B, M) observations
+    h: jax.Array,   # (M,)
+    r: jax.Array,   # (M,)
+    *,
+    a: float = 1.0,
+    q: float = 1e-3,
+    block_b: int = 1024,
+) -> tuple[jax.Array, jax.Array]:
+    b = x.shape[0]
+    block = min(block_b, max(b, 1))
+    pad = (-b) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        p = jnp.pad(p, (0, pad), constant_values=1.0)  # variance stays valid
+        z = jnp.pad(z, ((0, pad), (0, 0)))
+    x_new, p_new = kf_bank_kernel(
+        x, p, z, h, r, a=a, q=q, block_b=block, interpret=_interpret()
+    )
+    return x_new[:b], p_new[:b]

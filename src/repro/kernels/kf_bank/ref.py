@@ -1,0 +1,32 @@
+"""Oracle for the KF-bank kernel: the PAPER-FORM update (Eqs. 1-5) from
+`repro.core.kalman`, vmapped over the bank — proving the kernel's
+information-form update is algebraically identical."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kalman
+
+
+def kf_bank_ref(
+    x: jax.Array,   # (B,)
+    p: jax.Array,   # (B,)
+    z: jax.Array,   # (B, M)
+    h: jax.Array,   # (M,)
+    r: jax.Array,   # (M,)
+    *,
+    a: float = 1.0,
+    q: float = 1e-3,
+) -> tuple[jax.Array, jax.Array]:
+    m = z.shape[1]
+    params = kalman.KalmanParams(
+        a=jnp.full((1, 1), a, jnp.float32),
+        b=jnp.zeros((1, 1), jnp.float32),
+        h=h.reshape(m, 1).astype(jnp.float32),
+        q=jnp.full((1, 1), q, jnp.float32),
+        r=jnp.diag(r.astype(jnp.float32)),
+    )
+    states = kalman.KalmanState(x=x[:, None], p=p[:, None, None])
+    post, _, _ = kalman.batched_step(params, states, z, None)
+    return post.x[:, 0], post.p[:, 0, 0]

@@ -1,0 +1,26 @@
+"""Jit'd wrapper for the selective-scan kernel with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d"))
+def mamba_chunk_scan(
+    a: jax.Array,   # (B, L, D, S) fp32
+    b: jax.Array,
+    h0: jax.Array,  # (B, D, S) fp32
+    *,
+    chunk: int = 256,
+    block_d: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    return mamba_scan_kernel(
+        a, b, h0, chunk=chunk, block_d=block_d, interpret=_interpret()
+    )

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the selective-scan kernel: naive O(L) recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_ref(
+    a: jax.Array,   # (B, L, D, S)
+    b: jax.Array,
+    h0: jax.Array,  # (B, D, S)
+) -> tuple[jax.Array, jax.Array]:
+    def body(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a_t = jnp.moveaxis(a, 1, 0)
+    b_t = jnp.moveaxis(b, 1, 0)
+    h_last, hs = jax.lax.scan(body, h0, (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1), h_last

@@ -1,0 +1,470 @@
+"""Scan-aware HLO cost model: trip-count-correct FLOPs / bytes / wire bytes.
+
+XLA's `compiled.cost_analysis()` counts a `while` body ONCE regardless of
+trip count (verified in tests/test_hlo_cost.py) — fatally undercounting any
+model built on `lax.scan` (all of ours: layers, mamba chunks, microbatches).
+
+This module parses the PARTITIONED HLO text into its computation graph and
+computes, bottom-up:
+
+    total(comp) = sum(op costs) + sum(called_comp_total x multiplier)
+
+with multiplier = trip count for while bodies (extracted from the loop
+condition's comparison constant), 1 elsewhere.  Costs modeled:
+
+  flops:  dot        2 x prod(result_dims) x k   (k from contracting dims)
+          elementwise prod(result_dims)           (add/mul/exp/tanh/...)
+          reduce      prod(operand_dims)
+  bytes:  HBM traffic at op boundaries (result + operands) for the big
+          movers: dot, fusion boundaries, dynamic-(update-)slice, copy,
+          gather/scatter, concatenate, collectives.  Fusion-INTERNAL ops
+          contribute flops only — matching how fused elementwise chains
+          never round-trip HBM.
+  wire:   collective ops weighted by ring-algorithm factors (all-reduce
+          2(g-1)/g, all-gather (g-1)/g of gathered bytes, reduce-scatter
+          (g-1)x shard bytes, all-to-all (g-1)/g, permute 1 hop), times
+          enclosing trip counts — a collective inside the layer scan fires
+          once per layer.
+
+Operands are resolved through a module-wide SSA table (HLO prints operand
+NAMES only at use sites).  Validated against XLA's cost_analysis on
+scan-free programs in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "tanh", "rsqrt", "sqrt", "log",
+    "log-plus-one", "negate", "abs", "cosine", "sine", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "logistic", "cbrt",
+    "erf", "select", "clamp", "and", "or", "xor", "not", "atan2",
+    "remainder", "sign", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "compare", "is-finite",
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_BYTES_OPS = {"dot", "convolution", "fusion", "call", "dynamic-slice",
+              "dynamic-update-slice", "copy", "gather", "scatter",
+              "concatenate", "sort", "cholesky", "triangular-solve"}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\(.*?\))|(?:[\w\[\]{},]+))\s+"
+    r"([\w\-]+)\((.*)$"
+)
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COND_ATTR = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_ATTR = re.compile(r"body=%?([\w.\-]+)")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(\{\{[^}]*\}[^=]*?\}|\[[\d,]+\]<=\[[\d,]+\])")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_PERM_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """Total (elements, bytes) over a possibly-tuple type string."""
+    elems, bts = 0, 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bts += n * _DTYPE_BYTES[dt]
+    return elems, bts
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    wire_by_kind: dict = dataclasses.field(default_factory=dict)
+    coll_count: float = 0.0
+    wire_cross_pod: float = 0.0   # bytes on pod-spanning groups (DCI class)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.wire_bytes += other.wire_bytes
+        self.coll_count += other.coll_count
+        self.wire_cross_pod += other.wire_cross_pod
+        for k, v in other.wire_by_kind.items():
+            self.wire_by_kind[k] = self.wire_by_kind.get(k, 0.0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m, self.wire_bytes * m,
+                    {k: v * m for k, v in self.wire_by_kind.items()},
+                    self.coll_count * m, self.wire_cross_pod * m)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str    # everything after the opening paren of the operand list
+
+
+@dataclasses.dataclass
+class Module:
+    comps: dict            # name -> list[Op]
+    types: dict            # ssa name -> result type string
+    entry: Optional[str]
+
+
+def parse_module(hlo: str) -> Module:
+    comps: dict[str, list[Op]] = {}
+    types: dict[str, str] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = hdr.group(2)
+            comps[cur] = []
+            if hdr.group(1):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2), m.group(3), m.group(4))
+            comps[cur].append(op)
+            types[op.name] = op.result_type
+    return Module(comps=comps, types=types, entry=entry)
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Names inside the operand parens (attrs after `), ` are cut off)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return _OPERAND_NAME.findall(rest[:i])
+    return _OPERAND_NAME.findall(rest)
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if not m:
+        return 1
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(1, len([x for x in first.split(",") if x.strip()]))
+    dims = g[1:g.index("]")].split(",")
+    return int(dims[-1]) if len(dims) >= 2 else max(1, int(dims[0]))
+
+
+def _crosses_pod(rest: str, pod_size: Optional[int]) -> bool:
+    """True when a collective's replica groups span pods.
+
+    Explicit groups: any group with ids on both sides of a pod boundary.
+    Iota form [G,S]<=[N]: consecutive groups — spans iff a group straddles
+    a multiple of pod_size; transposed iota (`<=[..]T(..)`) produces
+    strided groups, which on our (pod, data, model) mesh are exactly the
+    pod-spanning ones."""
+    if not pod_size:
+        return False
+    m = _GROUPS_RE.search(rest)
+    if not m:
+        return False
+    g = m.group(1)
+    if g.startswith("{{"):
+        for grp in g[1:-1].split("},"):
+            ids = [int(x) for x in grp.strip("{}").split(",") if x.strip()]
+            if ids and (min(ids) // pod_size) != (max(ids) // pod_size):
+                return True
+        return False
+    # transposed iota (`[G,S]<=[..]T(..)`) => strided groups => pod-spanning
+    # on our (pod, data, model) device order
+    pos = rest.find(g)
+    if pos >= 0 and "T(" in rest[pos:pos + len(g) + 24]:
+        return True
+    # plain iota [G,S]<=[N]: group i covers [i*S, (i+1)*S)
+    dims = g[1:g.index("]")].split(",")
+    if len(dims) >= 2:
+        s = int(dims[-1])
+        return any((i * s) // pod_size != ((i + 1) * s - 1) // pod_size
+                   for i in range(int(dims[0])))
+    return False
+
+
+def _trip_count(cond_ops: list[Op]) -> int:
+    best = 1
+    for op in cond_ops:
+        if op.opcode == "constant":
+            m = _CONST_INT.search(f"constant({op.rest}")
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _score_shaped(type_str: str, seq: Optional[int]) -> bool:
+    """True for attention score/prob-class intermediates the flash kernel
+    keeps in VMEM: ndim >= 4, last dim == seq, and a second-to-last dim
+    that tiles seq (== seq unsharded; == seq/TP under sequence parallelism;
+    == head_dim for k^T layout copies, which flash also never materializes).
+
+    ndim >= 4 excludes (B, S, D) activations even when d_model == seq
+    (glm4: 4096 x 4096) and all weight matrices; decode logits (…, 1, S)
+    fail the >= 64 floor, so KV-cache reads are correctly retained."""
+    if seq is None:
+        return False
+    for _, dims_s in _SHAPE.findall(type_str):
+        dims = [int(d) for d in dims_s.split(",") if d]
+        if (len(dims) >= 4 and dims[-1] == seq and dims[-2] >= 64
+                and seq % dims[-2] == 0):
+            return True
+    return False
+
+
+# our attention einsums label score-class ops in HLO metadata
+# ("bqgrd,bkgd->bgrqk" scores; "bgrqk,bkgd->bqgrd" probs x V) — XLA keeps
+# the label through layout-change fusions/transposes, catching transposed
+# score tensors whose shapes evade the rule above.
+_SCORE_LABEL = "bgrqk"
+
+
+def _score_labeled(op: "Op") -> bool:
+    return _SCORE_LABEL in op.rest
+
+
+def _score_operand_factory(mod, seq):
+    def f(op):
+        for name in _operand_names(op.rest):
+            t = mod.types.get(name, "")
+            if _score_shaped(t, seq):
+                return True
+        return False
+    return f
+
+
+def _state_shaped(type_str: str, ssm_state: Optional[int]) -> bool:
+    """True for (…, C, D, S) selective-scan intermediates (ndim >= 4 with a
+    trailing ssm_state dim) — what the fused Pallas scan kernel
+    (kernels/mamba_scan/fused.py) keeps in VMEM."""
+    if ssm_state is None:
+        return False
+    for _, dims_s in _SHAPE.findall(type_str):
+        dims = [int(d) for d in dims_s.split(",") if d]
+        if len(dims) >= 4 and dims[-1] == ssm_state:
+            return True
+    return False
+
+
+def analyze_hlo(hlo: str, *, seq: Optional[int] = None,
+                assume_flash: bool = False,
+                ssm_state: Optional[int] = None,
+                assume_fused_scan: bool = False,
+                pod_size: Optional[int] = None) -> Cost:
+    """Trip-count-correct cost of the partitioned module.
+
+    HBM-byte policy (projected TPU fusion — documented in EXPERIMENTS.md):
+      dot/convolution      operands + result (stream in, stream out)
+      fusion/call          result only (elementwise chains write once; their
+                           reads are their producers' writes, counted there)
+      slice/copy/gather/…  2 x result (read + write)
+      collectives          2 x payload
+      ENTRY parameters     once (weights/optimizer state read per step)
+
+    assume_flash=True additionally drops the HBM bytes (never the FLOPs) of
+    score-shaped ops — what the validated Pallas flash kernel keeps in VMEM.
+    """
+    mod = parse_module(hlo)
+    if not mod.comps:
+        return Cost()
+    entry = mod.entry or next(iter(mod.comps))
+    memo: dict[tuple[str, bool], Cost] = {}
+    _score_operand = _score_operand_factory(mod, seq)
+
+    def operand_bytes(op: Op) -> int:
+        total = 0
+        for name in _operand_names(op.rest):
+            t = mod.types.get(name)
+            if t:
+                total += _shape_elems_bytes(t)[1]
+        return total
+
+    def comp_cost(name: str, in_fusion: bool, stack: tuple) -> Cost:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        if name not in mod.comps or name in stack:
+            return Cost()
+        total = Cost()
+        for op in mod.comps[name]:
+            total += op_cost(op, in_fusion, stack + (name,))
+        memo[key] = total
+        return total
+
+    def op_cost(op: Op, in_fusion: bool, stack: tuple) -> Cost:
+        c = Cost()
+        oc = op.opcode
+        relems, rbytes = _shape_elems_bytes(op.result_type)
+
+        if oc == "while":
+            body = _BODY_ATTR.search(op.rest)
+            cond = _COND_ATTR.search(op.rest)
+            trips = 1
+            if cond and cond.group(1) in mod.comps:
+                trips = _trip_count(mod.comps[cond.group(1)])
+            if body:
+                c += comp_cost(body.group(1), in_fusion,
+                               stack).scaled(max(trips, 1))
+            return c
+
+        if oc in ("fusion", "call", "async-start"):
+            m = _CALL_ATTR.search(op.rest)
+            if m:
+                inner = comp_cost(m.group(1), True, stack)
+                c.flops += inner.flops
+                c.wire_bytes += inner.wire_bytes
+                c.coll_count += inner.coll_count
+                for k, v in inner.wire_by_kind.items():
+                    c.wire_by_kind[k] = c.wire_by_kind.get(k, 0.0) + v
+            drop = (assume_flash and (_score_shaped(op.result_type, seq)
+                                      or _score_labeled(op))) \
+                or (assume_fused_scan
+                    and _state_shaped(op.result_type, ssm_state))
+            if not in_fusion and not drop:
+                c.bytes += rbytes  # write; reads = producers' writes
+            return c
+
+        if oc == "conditional":
+            branches = re.findall(
+                r"(?:true_computation|false_computation)=%?([\w.\-]+)",
+                op.rest)
+            for b in branches:
+                c += comp_cost(b, in_fusion, stack)
+            return c
+
+        base = oc.replace("-start", "")
+        if base in _COLL_KINDS and not oc.endswith("-done"):
+            g = _group_size(op.rest)
+            # -start result types include aliased input tuples; take the
+            # LAST array in the tuple as the payload (output buffer)
+            shapes = _SHAPE.findall(op.result_type)
+            payload = 0
+            if shapes:
+                dt, dims = shapes[-1]
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                payload = n * _DTYPE_BYTES.get(dt, 0)
+            if base == "all-reduce":
+                wire = 2.0 * (g - 1) / g * payload
+            elif base == "all-gather":
+                wire = (g - 1) / g * payload
+            elif base == "reduce-scatter":
+                wire = (g - 1) * payload
+            elif base == "all-to-all":
+                wire = (g - 1) / g * payload
+            else:
+                wire = float(payload)
+                pm = _PERM_RE.search(op.rest)
+                if pm and not pm.group(1).strip():
+                    wire = 0.0
+            c.wire_bytes += wire
+            c.coll_count += 1
+            c.wire_by_kind[base] = c.wire_by_kind.get(base, 0.0) + wire
+            if _crosses_pod(op.rest, pod_size):
+                c.wire_cross_pod += wire
+            if not in_fusion:
+                c.bytes += 2 * payload  # read + write
+            return c
+
+        if oc == "dot":
+            lhs_names = _operand_names(op.rest)
+            k = 1
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+            if m and lhs_names:
+                t = mod.types.get(lhs_names[0], "")
+                sm = _SHAPE.search(t)
+                if sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for i in (int(x) for x in m.group(1).split(",") if x):
+                        if i < len(dims):
+                            k *= dims[i]
+            c.flops += 2.0 * relems * k
+            if not in_fusion:
+                drop = (assume_flash and (
+                    _score_shaped(op.result_type, seq)
+                    or _score_labeled(op)
+                    or _score_operand(op))) \
+                    or (assume_fused_scan
+                        and _state_shaped(op.result_type, ssm_state))
+                if not drop:
+                    c.bytes += rbytes + operand_bytes(op)
+            return c
+
+        if oc == "convolution":
+            names = _operand_names(op.rest)
+            k = 1
+            if len(names) >= 2:
+                t = mod.types.get(names[1], "")
+                sm = _SHAPE.search(t)
+                if sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for d in dims[:-1]:
+                        k *= max(d, 1)
+            c.flops += 2.0 * relems * max(k, 1)
+            if not in_fusion:
+                c.bytes += rbytes + operand_bytes(op)
+            return c
+
+        if oc in _ELEMENTWISE:
+            c.flops += relems
+            return c
+
+        if oc in ("reduce", "reduce-window"):
+            names = _operand_names(op.rest)
+            oelems = 0
+            for n in names[:1]:
+                t = mod.types.get(n, "")
+                oelems += _shape_elems_bytes(t)[0]
+            c.flops += max(oelems, relems)
+            return c
+
+        if oc in _BYTES_OPS and not in_fusion:
+            drop = (assume_fused_scan
+                    and _state_shaped(op.result_type, ssm_state)) \
+                or (assume_flash and _score_labeled(op))
+            if not drop:
+                c.bytes += 2 * rbytes
+            return c
+
+        return c
+
+    total = comp_cost(entry, False, ())
+    for op in mod.comps.get(entry, []):
+        if op.opcode == "parameter":
+            total.bytes += _shape_elems_bytes(op.result_type)[1]
+    return total

@@ -1,0 +1,235 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), per the methodology:
+
+    compute_s    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+    memory_s     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective_s = wire_bytes_per_chip / 50 GB/s ICI link
+
+FLOPs / bytes come from `compiled.cost_analysis()` (per-device module after
+SPMD partitioning — verified against 6ND in tests; if the backend reports
+global numbers the chips divisor normalizes them, and the MODEL_FLOPS ratio
+column in EXPERIMENTS.md would expose any mismatch).
+
+Wire bytes are parsed from the PARTITIONED `compiled.as_text()` — summing
+result-shape bytes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute, weighted by ring-algorithm wire factors:
+
+    all-reduce      2(g-1)/g x B        all-gather     (g-1) x B_shard
+    reduce-scatter  (g-1) x B_out       all-to-all     (g-1)/g x B
+    collective-permute  B  (one hop)
+
+(g = replica-group size parsed per op; B = result bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12     # bf16
+HBM_BW = 819e9          # bytes/s
+LINK_BW = 50e9          # bytes/s per ICI link
+HBM_CAP = 16e9          # bytes
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result shapes like  bf16[256,4096,5120]{2,1,0}  or tuples thereof
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},]+)\s+"
+    r"(all-reduce-start|all-gather-start|reduce-scatter|all-to-all|"
+    r"collective-permute-start|all-reduce|all-gather|collective-permute)"
+    r"(?!-done)\b(.*)$"
+)
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^=]*\}|\[[\d,]+\]<=\[[\d,]+\])")
+_PERM_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_RE.search(attrs)
+    if not m:
+        return 1
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return len([x for x in first.split(",") if x.strip() != ""])
+    # iota form: [n_groups, group_size]<=[total]
+    dims = g[1:g.index("]")].split(",")
+    return int(dims[-1]) if len(dims) >= 2 else int(dims[0])
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0                 # per chip
+    by_kind: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, wire: float):
+        self.wire_bytes += wire
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + wire
+        self.count += 1
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m is None:
+            continue
+        result_type, op, attrs = m.group(1), m.group(2), m.group(3)
+        kind = op.replace("-start", "")
+        b = _shape_bytes(result_type)
+        if b == 0:
+            continue
+        g = _group_size(attrs)
+        if kind == "all-reduce":
+            wire = 2.0 * (g - 1) / g * b
+        elif kind == "all-gather":
+            # result is the gathered tensor; each chip receives (g-1)/g of it
+            wire = (g - 1) / g * b
+        elif kind == "reduce-scatter":
+            wire = (g - 1) * b          # result is the per-chip shard
+        elif kind == "all-to-all":
+            wire = (g - 1) / g * b
+        else:  # collective-permute
+            wire = float(b)
+            pm = _PERM_RE.search(attrs)
+            if pm and not pm.group(1).strip():
+                wire = 0.0
+        stats.add(kind, wire)
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: overlapped model = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def compute_fraction(self) -> float:
+        """How close the cell is to the compute roofline (1.0 = compute
+        bound at peak): compute_s / max(all terms)."""
+        t = self.step_time_s
+        return self.compute_s / t if t > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "compute_fraction": self.compute_fraction,
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "n_chips": self.n_chips,
+        }
+
+
+def analyze(cost: dict, collectives: CollectiveStats, n_chips: int) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=collectives.wire_bytes / LINK_BW,
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=hbm,
+        wire_bytes_per_chip=collectives.wire_bytes,
+        n_chips=n_chips,
+    )
+
+
+def model_flops(cfg, cell, n_tokens: Optional[int] = None) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) for the cell's token count;
+    x3 total for train (fwd+bwd), x1 for prefill, per-token for decode."""
+    n_params = count_params(cfg, active_only=True)
+    if n_tokens is None:
+        n_tokens = cell.batch * (cell.seq if cell.kind != "decode" else 1)
+    fwd = 2.0 * n_params * n_tokens
+    return 3.0 * fwd if cell.kind == "train" else fwd
+
+
+def count_params(cfg, active_only: bool = False) -> float:
+    """Parameter count from the config (embedding included once)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    total = emb
+    moe_mask = cfg.moe_layer_mask()
+    for i in range(cfg.n_layers):
+        if cfg.is_ssm or (cfg.is_hybrid and True):
+            di, ds = cfg.d_inner, cfg.ssm_state
+            if cfg.ssm_variant == "mamba1":
+                r = -(-cfg.d_model // 16)
+                total += d * 2 * di + cfg.ssm_conv * di + di * (r + 2 * ds) \
+                    + r * di + di * ds + di * d
+            else:
+                nh = di // cfg.ssm_head_dim
+                total += d * (2 * di + 2 * ds + nh) \
+                    + cfg.ssm_conv * (di + 2 * ds) + di * d + di
+        elif moe_mask[i]:
+            att = d * cfg.n_heads * cfg.head_dim * 2 \
+                + d * cfg.n_kv_heads * cfg.head_dim * 2
+            e_active = cfg.n_experts_active if active_only else cfg.n_experts
+            moe = 3 * d * f * e_active + d * cfg.n_experts  # + router
+            if cfg.n_shared_experts:
+                moe += 3 * d * f * cfg.n_shared_experts
+            total += att + moe
+        else:
+            att = d * cfg.n_heads * cfg.head_dim * 2 \
+                + d * cfg.n_kv_heads * cfg.head_dim * 2
+            total += att + 3 * d * f
+    if cfg.is_hybrid:
+        # one shared attention+MLP block (counted once; applied n/period x)
+        total += d * cfg.n_heads * cfg.head_dim * 2 \
+            + d * cfg.n_kv_heads * cfg.head_dim * 2 + 3 * d * cfg.d_ff
+    if cfg.is_encoder_decoder:
+        enc = cfg.n_encoder_layers * (
+            d * cfg.n_heads * cfg.head_dim * 2
+            + d * cfg.n_kv_heads * cfg.head_dim * 2 + 3 * d * f)
+        dec_cross = cfg.n_layers * (
+            d * cfg.n_heads * cfg.head_dim * 2
+            + d * cfg.n_kv_heads * cfg.head_dim * 2)
+        total += enc + dec_cross
+    return float(total)

@@ -1,0 +1,207 @@
+"""Input ShapeDtypeStruct stand-ins + step builders for every
+(architecture x input-shape) cell — the dry-run's contract.
+
+Shapes (assignment):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill_step (fwd logits)
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token,
+                                                 KV/SSM cache of seq_len)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; SSM/hybrid/SWA
+                                                 archs only (sub-quadratic)
+
+Applicability:
+  * long_500k skipped for pure full-attention archs (DESIGN.md §5);
+  * seamless-m4t (enc-dec): train/prefill run the teacher-forced decoder
+    over `seq` tokens with `frontend_len` encoder frames; decode shapes
+    lower its DECODER step (self-KV cache of seq_len + precomputed cross
+    K/V) — it is not encoder-only, so decode cells run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+# archs with sub-quadratic long-context decode (DESIGN.md §5)
+LONG_CTX_ARCHS = ("h2o-danube-1.8b", "zamba2-2.7b", "falcon-mamba-7b")
+
+
+def applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CTX_ARCHS
+    return True
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in configs.ARCH_IDS for s in SHAPES]
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, cell: ShapeCell) -> dict[str, Any]:
+    """Abstract train/prefill batch for one cell."""
+    b, s = cell.batch, cell.seq
+    out = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+        "mask": _sds((b, s), jnp.float32),
+    }
+    if cfg.frontend:
+        out["embeds"] = _sds(
+            (b, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Abstract state builders (eval_shape — nothing is allocated)
+# --------------------------------------------------------------------------
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: opt_lib.OptimizerConfig,
+                         *, with_residuals: bool = False,
+                         data_size: int = 1):
+    """(abstract TrainState, spec tree) — nothing allocated (eval_shape).
+
+    The spec tree holds PartitionSpecs (plain data); it is captured from
+    inside the traced init via a holder so no real params ever exist.
+    """
+    holder = {}
+
+    def init():
+        state, specs = step_lib.init_train_state(
+            jax.random.PRNGKey(0), cfg, opt_cfg,
+            with_residuals=with_residuals, data_size=data_size)
+        holder["specs"] = specs
+        return state
+
+    state = jax.eval_shape(init)
+    return state, holder["specs"]
+
+
+def abstract_params(cfg: ModelConfig):
+    def init():
+        if cfg.is_encoder_decoder:
+            return encdec.make_encdec(jax.random.PRNGKey(0), cfg)[0]
+        return lm.make_lm(jax.random.PRNGKey(0), cfg)[0]
+
+    return jax.eval_shape(init)
+
+
+def param_specs(cfg: ModelConfig):
+    """Spec trees contain no arrays; safe to build eagerly via eval_shape
+    closure trick: run make_* under eval_shape but return only specs."""
+    if cfg.is_encoder_decoder:
+        maker = encdec.make_encdec
+    else:
+        maker = lm.make_lm
+
+    holder = {}
+
+    def init():
+        params, specs = maker(jax.random.PRNGKey(0), cfg)
+        holder["specs"] = specs
+        return params
+
+    jax.eval_shape(init)
+    return holder["specs"]
+
+
+def abstract_decode_inputs(cfg: ModelConfig, cell: ShapeCell):
+    """(token, state) ShapeDtypeStructs for serve_step at this cell."""
+    b, s = cell.batch, cell.seq
+    token = _sds((b, 1), jnp.int32)
+    if cfg.is_encoder_decoder:
+        def init():
+            # cross K/V from a frontend_len encoder pass; self cache len s
+            kv = jax.ShapeDtypeStruct
+            state = encdec.EncDecState(
+                self_kv=lm.KVCache(
+                    k=jnp.zeros((cfg.n_layers, b, s, cfg.n_kv_heads,
+                                 cfg.head_dim), lm.ACT_DTYPE),
+                    v=jnp.zeros((cfg.n_layers, b, s, cfg.n_kv_heads,
+                                 cfg.head_dim), lm.ACT_DTYPE),
+                    length=jnp.zeros((cfg.n_layers, b), jnp.int32),
+                ),
+                cross_k=jnp.zeros((cfg.n_layers, b, cfg.frontend_len,
+                                   cfg.n_kv_heads, cfg.head_dim),
+                                  lm.ACT_DTYPE),
+                cross_v=jnp.zeros((cfg.n_layers, b, cfg.frontend_len,
+                                   cfg.n_kv_heads, cfg.head_dim),
+                                  lm.ACT_DTYPE),
+                length=jnp.zeros((b,), jnp.int32),
+            )
+            return state
+
+        state = jax.eval_shape(init)
+        return token, state
+    state = jax.eval_shape(
+        functools.partial(lm.init_decode_state, b, s, cfg))
+    return token, state
+
+
+def decode_specs(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_state_specs(cfg)
+    return lm.decode_state_specs(cfg)
+
+
+# --------------------------------------------------------------------------
+# Step functions per cell kind
+# --------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    if cfg.is_encoder_decoder:
+        def prefill(params, batch):
+            return encdec.forward(params, batch["tokens"], batch["embeds"],
+                                  cfg)
+        return prefill
+
+    def prefill(params, batch):
+        return lm.forward(params, batch["tokens"], cfg,
+                          embeds=batch.get("embeds")).logits
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    if cfg.is_encoder_decoder:
+        def serve(params, token, state):
+            return encdec.decode_step(params, token, state, cfg)
+        return serve
+
+    def serve(params, token, state):
+        return lm.decode_step(params, token, state, cfg)
+
+    return serve
+
+
+def default_opt_cfg(cfg: ModelConfig) -> opt_lib.OptimizerConfig:
+    return opt_lib.OptimizerConfig(moment_dtype=cfg.optimizer_dtype)

@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig
+from repro.models import lm
+
+__all__ = ["ModelConfig", "lm"]

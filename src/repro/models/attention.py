@@ -1,0 +1,279 @@
+"""Attention: GQA + RoPE (partial/theta), causal / sliding-window / cross.
+
+Three lowerings of the same math:
+  * `attend_ref`      — pure-jnp O(S^2) reference (oracle for everything);
+  * `attend`          — production path: chunked flash attention via the
+                        Pallas kernel on TPU, jnp fallback elsewhere;
+  * `attend_decode`   — single-query attention against a KV cache.
+
+All paths take fp32 softmax, bf16 matmuls with fp32 accumulation, support
+GQA head-repetition without materializing repeated KV, sliding windows
+(h2o-danube), and logit soft-capping (grok-1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# RoPE (rotary position embeddings), partial-rotary capable
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction) // 2 * 2  # rotated dims, even
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: Array, positions: Array, fraction: float, theta: float) -> Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv, rot = rope_frequencies(d, fraction, theta)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def softcap(logits: Array, cap: Optional[float]) -> Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def make_attention(key, cfg: ModelConfig, dtype) -> dict:
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": layers.dense_init(kq, d, (d, cfg.n_heads, hd), dtype),
+        "wk": layers.dense_init(kk, d, (d, cfg.n_kv_heads, hd), dtype),
+        "wv": layers.dense_init(kv, d, (d, cfg.n_kv_heads, hd), dtype),
+        "wo": layers.dense_init(ko, cfg.n_heads * hd, (cfg.n_heads, hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+    return p
+
+
+def attention_spec(cfg: ModelConfig) -> dict:
+    s = {
+        "wq": P("embed", "heads", None),
+        "wk": P("embed", "kv", None),
+        "wv": P("embed", "kv", None),
+        "wo": P("heads", None, "embed"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P("heads", None)
+        s["bk"] = P("kv", None)
+        s["bv"] = P("kv", None)
+    return s
+
+
+def qkv_project(p, x: Array, cfg: ModelConfig, positions: Array):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd), RoPE applied."""
+    q = layers.matmul(x, p["wq"], "bsd,dhk->bshk")
+    k = layers.matmul(x, p["wk"], "bsd,dhk->bshk")
+    v = layers.matmul(x, p["wv"], "bsd,dhk->bshk")
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if cfg.rope_fraction > 0:
+        q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# Reference attention (oracle)
+# --------------------------------------------------------------------------
+
+def attend_ref(
+    q: Array, k: Array, v: Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    q_offset: int | Array = 0,
+) -> Array:
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D). Returns (B, Sq, H, D).
+
+    `q_offset`: absolute position of q[0] relative to k[0] (decode: Sk-1).
+    """
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qf = q.reshape(b, sq, kvh, rep, d)
+    logits = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", qf, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(d).astype(jnp.float32)
+    logits = softcap(logits, logit_cap)
+
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+# --------------------------------------------------------------------------
+# Production attention: flash kernel on TPU, jnp elsewhere
+# --------------------------------------------------------------------------
+
+def attend(
+    q: Array, k: Array, v: Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    use_kernel: bool = False,
+) -> Array:
+    """Training/prefill attention. On TPU targets the Pallas flash kernel is
+    used (`repro.kernels.flash_attn`); the default jnp path lowers to the
+    same fused-softmax HLO that XLA:TPU pattern-matches into flash."""
+    if use_kernel:
+        from repro.kernels.flash_attn import ops as flash_ops
+
+        return flash_ops.flash_attention(
+            q, k, v, causal=causal, window=window, logit_cap=logit_cap
+        )
+    return attend_ref(q, k, v, causal=causal, window=window, logit_cap=logit_cap)
+
+
+def attend_decode(
+    q: Array, k_cache: Array, v_cache: Array, cache_len: Array,
+    *,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+) -> Array:
+    """One-token decode: q (B, 1, H, D) vs cache (B, Smax, KV, D).
+
+    `cache_len` (B,) int32 — number of valid cache entries (includes the
+    token being decoded, already written at cache_len-1).
+    """
+    b, _, h, d = q.shape
+    smax, kvh = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kvh
+    qf = q.reshape(b, kvh, rep, d)
+    logits = jnp.einsum(
+        "bgrd,bkgd->bgrk", qf, k_cache, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(d).astype(jnp.float32)
+    logits = softcap(logits, logit_cap)
+    k_pos = jnp.arange(smax)[None, :]
+    mask = k_pos < cache_len[:, None]
+    if window is not None:
+        mask &= k_pos >= (cache_len[:, None] - window)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bgrk,bkgd->bgrd", probs, v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+# --------------------------------------------------------------------------
+# Full block-level entry points
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array        # (B, Smax, KV, D)
+    v: Array
+    length: Array   # (B,) valid entries
+
+
+def self_attention(
+    p, x: Array, cfg: ModelConfig, positions: Array, *, use_kernel: bool = False
+) -> Array:
+    q, k, v = qkv_project(p, x, cfg, positions)
+    o = attend(
+        q, k, v,
+        causal=True,
+        window=cfg.sliding_window,
+        logit_cap=cfg.attn_logit_softcap,
+        use_kernel=use_kernel,
+    )
+    return layers.matmul(o, p["wo"], "bshk,hkd->bsd")
+
+
+def self_attention_decode(
+    p, x: Array, cfg: ModelConfig, cache: KVCache
+) -> tuple[Array, KVCache]:
+    """x: (B, 1, D). Appends to the cache then attends.
+
+    Sliding-window archs use a RING cache of size `window`: the write slot
+    wraps (`length % Smax`), all resident entries are in-window by
+    construction, and RoPE is applied with absolute positions at write time
+    so dot products stay relative-position-correct.  This is what keeps the
+    long_500k decode cell O(window) instead of O(context) in HBM.
+    """
+    positions = cache.length[:, None]  # absolute position of the new token
+    q, k, v = qkv_project(p, x, cfg, positions)
+    b = x.shape[0]
+    smax = cache.k.shape[1]
+    ring = cfg.sliding_window is not None and smax <= cfg.sliding_window
+    idx = cache.length % smax if ring else cache.length
+    k_cache = cache.k.at[jnp.arange(b), idx].set(k[:, 0])
+    v_cache = cache.v.at[jnp.arange(b), idx].set(v[:, 0])
+    new_len = cache.length + 1
+    if ring:
+        valid = jnp.minimum(new_len, smax)
+        o = attend_decode(
+            q, k_cache, v_cache, valid,
+            window=None,  # residency == window by construction
+            logit_cap=cfg.attn_logit_softcap,
+        )
+    else:
+        o = attend_decode(
+            q, k_cache, v_cache, new_len,
+            window=cfg.sliding_window,
+            logit_cap=cfg.attn_logit_softcap,
+        )
+    out = layers.matmul(o, p["wo"], "bshk,hkd->bsd")
+    return out, KVCache(k=k_cache, v=v_cache, length=new_len)
+
+
+def cross_attention(
+    p, x: Array, enc_kv: tuple[Array, Array], cfg: ModelConfig
+) -> Array:
+    """Decoder cross-attention over precomputed encoder K/V (seamless-m4t)."""
+    q = layers.matmul(x, p["wq"], "bsd,dhk->bshk")
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+    k, v = enc_kv
+    o = attend_ref(q, k, v, causal=False)
+    return layers.matmul(o, p["wo"], "bshk,hkd->bsd")
+
+
+def encode_kv(p, enc_out: Array, cfg: ModelConfig) -> tuple[Array, Array]:
+    k = layers.matmul(enc_out, p["wk"], "bsd,dhk->bshk")
+    v = layers.matmul(enc_out, p["wv"], "bsd,dhk->bshk")
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return k, v

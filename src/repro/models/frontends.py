@@ -1,0 +1,68 @@
+"""Modality frontend STUBS (per assignment: [audio]/[vlm] backbones only).
+
+The ViT / speech encoder themselves are out of scope — `input_specs()`
+supplies *precomputed* patch/frame embeddings of shape
+(batch, frontend_len, frontend_dim).  What IS part of the assigned backbone
+is the learned projector that maps frontend embeddings into the LM embedding
+space (internvl2: 2-layer MLP projector; seamless: linear frame projector),
+so that is implemented and trained.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def make_projector(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    fd, d = cfg.frontend_dim, cfg.d_model
+    if cfg.frontend == "vision":  # internvl2: norm + 2-layer GELU MLP
+        return {
+            "norm": layers.make_norm(fd, "layernorm"),
+            "w1": layers.dense_init(k1, fd, (fd, d), dtype),
+            "b1": jnp.zeros((d,), dtype),
+            "w2": layers.dense_init(k2, d, (d, d), dtype),
+            "b2": jnp.zeros((d,), dtype),
+        }
+    # audio (seamless): single linear projection of fbank-frame features
+    return {
+        "w1": layers.dense_init(k1, fd, (fd, d), dtype),
+        "b1": jnp.zeros((d,), dtype),
+    }
+
+
+def projector_spec(cfg: ModelConfig) -> dict:
+    if cfg.frontend == "vision":
+        return {
+            "norm": layers.norm_spec("layernorm"),
+            "w1": P(None, "embed"),
+            "b1": P("embed"),
+            "w2": P("embed", "embed"),
+            "b2": P("embed"),
+        }
+    return {"w1": P(None, "embed"), "b1": P("embed")}
+
+
+def apply_projector(p, embeds: Array, cfg: ModelConfig) -> Array:
+    """embeds: (B, F, frontend_dim) -> (B, F, d_model)."""
+    x = embeds
+    if cfg.frontend == "vision":
+        x = layers.apply_norm(p["norm"], x, "layernorm")
+        x = layers.matmul(x, p["w1"]) + p["b1"].astype(x.dtype)
+        x = jax.nn.gelu(x)
+        x = layers.matmul(x, p["w2"]) + p["b2"].astype(x.dtype)
+        return x
+    return layers.matmul(x, p["w1"]) + p["b1"].astype(x.dtype)
+
+
+def splice_prefix(token_embeds: Array, prefix: Array) -> Array:
+    """Replace the first F positions of the token embedding stream with the
+    projected modality prefix (the stub contract used by input_specs)."""
+    f = prefix.shape[1]
+    return jnp.concatenate([prefix, token_embeds[:, f:]], axis=1)

@@ -1,0 +1,121 @@
+"""Parameter-dict building blocks: norms, embeddings, gated MLPs.
+
+Conventions
+-----------
+* Params are nested dicts of `jax.Array`; every creator takes an RNG key and
+  returns (params, spec) where spec mirrors the structure with
+  `jax.sharding.PartitionSpec` leaves using LOGICAL axis names — resolved to
+  mesh axes by `repro.dist.sharding`.
+* Weights are stored in `cfg.param_dtype`; matmuls run in bfloat16 with fp32
+  accumulation (`preferred_element_type`), norms/softmax in fp32.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+# Logical axis names (resolved in repro.dist.sharding.AXIS_RULES):
+#   "batch"  -> ("pod", "data")     "vocab"  -> "model"
+#   "embed"  -> None                "heads"  -> "model"
+#   "mlp"    -> "model"             "kv"     -> "model" (when divisible)
+#   "expert" -> "model" (EP)        "seq"    -> None (or "data" for long ctx)
+
+
+def truncated_normal(key, shape, scale, dtype):
+    """He-style init, fp32 draw then cast."""
+    x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (x * scale).astype(dtype)
+
+
+def dense_init(key, in_dim: int, shape, dtype) -> Array:
+    return truncated_normal(key, shape, (1.0 / in_dim) ** 0.5, dtype)
+
+
+def make_norm(d: int, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_spec(kind: str):
+    if kind == "rmsnorm":
+        return {"scale": P(None)}
+    return {"scale": P(None), "bias": P(None)}
+
+
+def apply_norm(p, x: Array, kind: str, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * rms * p["scale"]).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def matmul(x: Array, w: Array, spec: str | None = None) -> Array:
+    """bf16 matmul with fp32 accumulation over the last axis of x."""
+    return jnp.einsum(
+        spec or "...d,df->...f",
+        x,
+        w.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# --------------------------------------------------------------------------
+
+def make_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, (d_model, d_ff), dtype),   # gate
+        "wg": dense_init(k2, d_model, (d_model, d_ff), dtype),   # up
+        "wo": dense_init(k3, d_ff, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_spec() -> dict:
+    return {
+        "wi": P("embed", "mlp"),
+        "wg": P("embed", "mlp"),
+        "wo": P("mlp", "embed"),
+    }
+
+
+def apply_mlp(p, x: Array, act: str) -> Array:
+    g = matmul(x, p["wi"])
+    u = matmul(x, p["wg"])
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return matmul(a * u, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def make_embedding(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": truncated_normal(key, (vocab, d_model), 0.02, dtype)}
+
+
+def embedding_spec() -> dict:
+    return {"table": P("vocab", "embed")}
+
+
+def embed(p, tokens: Array, dtype) -> Array:
+    return jnp.take(p["table"], tokens, axis=0).astype(dtype)
+
+
+def unembed(p, x: Array) -> Array:
+    """Logits in fp32 (softmax stability); vocab dim stays sharded."""
+    return jnp.einsum(
+        "...d,vd->...v", x, p["table"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,553 @@
+"""Decoder LM assembly: dense / MoE / SSM / hybrid, train + prefill + decode.
+
+Layer-pattern design
+--------------------
+Every assigned decoder arch is a repetition of a short *pattern* of block
+kinds (period P), scanned `n_layers // P` times with `lax.scan` over stacked
+parameters (fast compiles at 40–64 layers, O(1) HLO size in depth):
+
+  dense archs           P=1  [attn+mlp]
+  grok-1                P=1  [attn+moe]
+  llama4-maverick       P=2  [attn+mlp, attn+moe]       (MoE every 2nd layer)
+  falcon-mamba          P=1  [mamba1]
+  zamba2                P=6  [mamba2 x6] + SHARED attn block (weights reused
+                             across super-blocks — Zamba's defining trick)
+
+Params for pattern position j are stacked over super-blocks; the shared
+attention block is closed over (not scanned).  Activation-checkpoint policy
+(`cfg.remat`) wraps the scan body.  MoE aux losses accumulate in the carry.
+
+Decode threads per-kind caches through the same scan as scanned inputs and
+re-collected outputs; prefill is `forward(..., return_caches=True)`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding
+from repro.models import attention, frontends, layers, mamba, moe
+from repro.models.attention import KVCache
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+ACT_DTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------------
+# Pattern derivation
+# --------------------------------------------------------------------------
+
+def layer_pattern(cfg: ModelConfig) -> tuple[tuple[str, ...], int]:
+    """Return (pattern, n_super). pattern entries: dense|moe|mamba1|mamba2."""
+    if cfg.is_hybrid:
+        p = cfg.shared_attn_period
+        assert cfg.n_layers % p == 0
+        return tuple(["mamba2"] * p), cfg.n_layers // p
+    if cfg.is_ssm:
+        return ("mamba1",), cfg.n_layers
+    if cfg.is_moe:
+        period = cfg.moe_layer_period
+        assert cfg.n_layers % period == 0
+        mask = cfg.moe_layer_mask()[:period]
+        return tuple("moe" if m else "dense" for m in mask), cfg.n_layers // period
+    return ("dense",), cfg.n_layers
+
+
+# --------------------------------------------------------------------------
+# Per-kind block param constructors / specs / applications
+# --------------------------------------------------------------------------
+
+def _make_block(key, kind: str, cfg: ModelConfig, dtype) -> dict:
+    if kind in ("dense", "moe"):
+        k1, k2 = jax.random.split(key)
+        p = {
+            "ln1": layers.make_norm(cfg.d_model, cfg.norm),
+            "ln2": layers.make_norm(cfg.d_model, cfg.norm),
+            "attn": attention.make_attention(k1, cfg, dtype),
+        }
+        if kind == "moe":
+            p["moe"] = moe.make_moe(k2, cfg, dtype)
+        else:
+            p["mlp"] = layers.make_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+        return p
+    if kind == "mamba1":
+        return {
+            "ln": layers.make_norm(cfg.d_model, cfg.norm),
+            "mixer": mamba.make_mamba1(key, cfg, dtype),
+        }
+    if kind == "mamba2":
+        return {
+            "ln": layers.make_norm(cfg.d_model, cfg.norm),
+            "mixer": mamba.make_mamba2(key, cfg, dtype),
+        }
+    raise ValueError(kind)
+
+
+def _block_spec(kind: str, cfg: ModelConfig) -> dict:
+    if kind in ("dense", "moe"):
+        s = {
+            "ln1": layers.norm_spec(cfg.norm),
+            "ln2": layers.norm_spec(cfg.norm),
+            "attn": attention.attention_spec(cfg),
+        }
+        if kind == "moe":
+            s["moe"] = moe.moe_spec(cfg)
+        else:
+            s["mlp"] = layers.mlp_spec()
+        return s
+    spec = mamba.mamba1_spec(cfg) if kind == "mamba1" else mamba.mamba2_spec(cfg)
+    return {"ln": layers.norm_spec(cfg.norm), "mixer": spec}
+
+
+def _zero_aux() -> moe.MoEAux:
+    z = jnp.float32(0.0)
+    return moe.MoEAux(z, z, jnp.zeros((1,), jnp.float32))
+
+
+def _apply_block(
+    p, kind: str, x: Array, cfg: ModelConfig, positions: Array,
+    *, use_kernel: bool,
+) -> tuple[Array, Optional[moe.MoEAux]]:
+    if kind in ("dense", "moe"):
+        h = layers.apply_norm(p["ln1"], x, cfg.norm)
+        h = attention.self_attention(
+            p["attn"], h, cfg, positions, use_kernel=use_kernel
+        )
+        x = sharding.constrain(x + h, "batch", sharding.seq_axis(), "embed")
+        h = layers.apply_norm(p["ln2"], x, cfg.norm)
+        if kind == "moe":
+            h, aux = moe.apply_moe(p["moe"], h, cfg)
+        else:
+            h, aux = layers.apply_mlp(p["mlp"], h, cfg.act), None
+        return sharding.constrain(x + h, "batch", sharding.seq_axis(), "embed"), aux
+    h = layers.apply_norm(p["ln"], x, cfg.norm)
+    if kind == "mamba1":
+        h = mamba.apply_mamba1(p["mixer"], h, cfg, use_kernel=use_kernel)
+    else:
+        h = mamba.apply_mamba2(p["mixer"], h, cfg)
+    return sharding.constrain(x + h, "batch", sharding.seq_axis(), "embed"), None
+
+
+# --------------------------------------------------------------------------
+# Model construction
+# --------------------------------------------------------------------------
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def make_lm(key, cfg: ModelConfig) -> tuple[dict, dict]:
+    """Returns (params, logical PartitionSpec tree of identical structure)."""
+    dtype = param_dtype(cfg)
+    pattern, n_super = layer_pattern(cfg)
+    k_emb, k_blocks, k_shared, k_head, k_front = jax.random.split(key, 5)
+
+    params: dict[str, Any] = {
+        "embed": layers.make_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": layers.make_norm(cfg.d_model, cfg.norm),
+    }
+    specs: dict[str, Any] = {
+        "embed": layers.embedding_spec(),
+        "final_norm": layers.norm_spec(cfg.norm),
+    }
+
+    # stacked pattern-position params: blocks[j] has leading dim n_super
+    blocks, bspecs = [], []
+    pos_keys = jax.random.split(k_blocks, len(pattern))
+    for j, kind in enumerate(pattern):
+        lkeys = jax.random.split(pos_keys[j], n_super)
+        stacked = jax.vmap(lambda k: _make_block(k, kind, cfg, dtype))(lkeys)
+        blocks.append(stacked)
+        spec = _block_spec(kind, cfg)
+        bspecs.append(jax.tree.map(
+            lambda s: P(None, *s), spec, is_leaf=lambda s: isinstance(s, P)
+        ))
+    params["blocks"] = blocks
+    specs["blocks"] = bspecs
+
+    if cfg.is_hybrid:  # zamba2's single shared attention block
+        params["shared_attn"] = _make_block(k_shared, "dense", cfg, dtype)
+        specs["shared_attn"] = _block_spec("dense", cfg)
+
+    if not cfg.tie_embeddings:
+        params["unembed"] = {
+            "table": layers.truncated_normal(
+                k_head, (cfg.vocab_size, cfg.d_model), cfg.d_model ** -0.5, dtype
+            )
+        }
+        specs["unembed"] = layers.embedding_spec()
+
+    if cfg.frontend:
+        params["projector"] = frontends.make_projector(k_front, cfg, dtype)
+        specs["projector"] = frontends.projector_spec(cfg)
+
+    return params, specs
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+class ForwardOut(NamedTuple):
+    logits: Array
+    aux: moe.MoEAux
+    caches: Any  # per-kind stacked caches when return_caches else None
+
+
+def forward(
+    params: dict,
+    tokens: Array,
+    cfg: ModelConfig,
+    *,
+    embeds: Optional[Array] = None,
+    use_kernel: bool = False,
+    return_caches: bool = False,
+    cache_len: Optional[int] = None,
+) -> ForwardOut:
+    """tokens: (B, S) int32; embeds: (B, F, frontend_dim) for [audio]/[vlm]."""
+    pattern, n_super = layer_pattern(cfg)
+    b, s = tokens.shape
+
+    x = layers.embed(params["embed"], tokens, ACT_DTYPE)
+    if cfg.frontend and embeds is not None:
+        prefix = frontends.apply_projector(
+            params["projector"], embeds.astype(ACT_DTYPE), cfg
+        )
+        x = frontends.splice_prefix(x, prefix)
+    x = sharding.constrain(x, "batch", sharding.seq_axis(), "embed")
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    smax = cache_len or s
+    _shared = params.get("shared_attn")
+
+    n_experts = cfg.n_experts if cfg.is_moe else 1
+
+    def super_block(x, block_params):
+        lb = jnp.float32(0.0)
+        zl = jnp.float32(0.0)
+        load = jnp.zeros((n_experts,), jnp.float32)
+        for j, kind in enumerate(pattern):
+            x, aux = _apply_block(
+                block_params[j], kind, x, cfg, positions, use_kernel=use_kernel
+            )
+            if aux is not None:
+                lb = lb + aux.load_balance_loss
+                zl = zl + aux.router_z_loss
+                load = load + aux.expert_load
+        if cfg.is_hybrid:
+            x, _ = _apply_block(
+                _shared, "dense", x, cfg, positions, use_kernel=use_kernel
+            )
+        return x, (lb, zl, load)
+
+    body = _remat_wrap(super_block, cfg)
+
+    def scan_body(carry, block_params):
+        x, lb_acc, zl_acc = carry
+        x, (lb, zl, load) = body(x, block_params)
+        return (x, lb_acc + lb, zl_acc + zl), load
+
+    (x, lb, zl), loads = jax.lax.scan(
+        scan_body, (x, jnp.float32(0.0), jnp.float32(0.0)),
+        tuple(params["blocks"]),
+    )
+    aux = moe.MoEAux(
+        load_balance_loss=lb, router_z_loss=zl,
+        expert_load=jnp.mean(loads, axis=0),
+    )
+
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed(head, x)
+    logits = sharding.constrain(logits, "batch", None, "vocab")
+
+    caches = None
+    if return_caches:
+        caches = prefill_caches(params, tokens, cfg, smax, embeds=embeds)
+    return ForwardOut(logits=logits, aux=aux, caches=caches)
+
+
+# --------------------------------------------------------------------------
+# Loss
+# --------------------------------------------------------------------------
+
+def cross_entropy(logits: Array, labels: Array, mask: Array) -> Array:
+    """logits (B,S,V) fp32, labels (B,S) int32, mask (B,S) {0,1}."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    use_kernel: bool = False,
+    lb_coef: float = 0.01,
+    z_coef: float = 1e-3,
+) -> tuple[Array, dict]:
+    out = forward(
+        params, batch["tokens"], cfg,
+        embeds=batch.get("embeds"), use_kernel=use_kernel,
+    )
+    ce = cross_entropy(out.logits, batch["labels"], batch["mask"])
+    loss = ce
+    metrics = {"ce": ce}
+    if cfg.is_moe:
+        loss = loss + lb_coef * out.aux.load_balance_loss \
+            + z_coef * out.aux.router_z_loss
+        metrics["lb_loss"] = out.aux.load_balance_loss
+        metrics["z_loss"] = out.aux.router_z_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------
+# Decode: per-kind caches threaded through the layer scan
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DecodeState:
+    """Stacked per-pattern-position caches + shared-block caches."""
+
+    caches: list[Any]            # caches[j]: stacked (n_super, ...) per kind
+    shared_kv: Optional[KVCache]  # (n_super, ...) for the hybrid shared block
+    length: Array                 # (B,) tokens decoded so far
+
+    def tree_flatten(self):
+        return (self.caches, self.shared_kv, self.length), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    DecodeState,
+    lambda s: s.tree_flatten(),
+    DecodeState.tree_unflatten,
+)
+
+
+def init_decode_state(batch: int, max_len: int, cfg: ModelConfig) -> DecodeState:
+    pattern, n_super = layer_pattern(cfg)
+    dtype = ACT_DTYPE
+    if cfg.sliding_window is not None:  # ring cache: O(window) not O(context)
+        max_len = min(max_len, cfg.sliding_window)
+
+    def stack(make_one):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_super,) + x.shape), make_one
+        )
+
+    caches = []
+    for kind in pattern:
+        if kind in ("dense", "moe"):
+            one = KVCache(
+                k=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+                v=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+                length=jnp.zeros((batch,), jnp.int32),
+            )
+        elif kind == "mamba1":
+            one = mamba.init_mamba1_state(batch, cfg, dtype)
+        else:
+            one = mamba.init_mamba2_state(batch, cfg, dtype)
+        caches.append(stack(one))
+
+    shared_kv = None
+    if cfg.is_hybrid:
+        shared_kv = stack(KVCache(
+            k=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            v=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            length=jnp.zeros((batch,), jnp.int32),
+        ))
+    return DecodeState(
+        caches=caches, shared_kv=shared_kv,
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def decode_state_specs(cfg: ModelConfig) -> DecodeState:
+    """Logical PartitionSpecs matching init_decode_state's structure."""
+    pattern, _ = layer_pattern(cfg)
+    # kv claims `model` when head count divides; otherwise kv_seq shards the
+    # cache's sequence dim over `model` (partial-softmax decode) — resolved
+    # by the priority/conflict rules in dist.sharding.logical_to_mesh.
+    kv_spec = KVCache(
+        k=P(None, "batch", "kv_seq", "kv", None),
+        v=P(None, "batch", "kv_seq", "kv", None),
+        length=P(None, "batch"),
+    )
+    caches = []
+    for kind in pattern:
+        if kind in ("dense", "moe"):
+            caches.append(kv_spec)
+        elif kind == "mamba1":
+            caches.append(mamba.Mamba1State(
+                conv=P(None, "batch", None, "mlp"),
+                ssm=P(None, "batch", "mlp", None),
+            ))
+        else:
+            caches.append(mamba.Mamba2State(
+                conv=P(None, "batch", None, None),
+                ssm=P(None, "batch", None, None, None),
+            ))
+    return DecodeState(
+        caches=caches,
+        shared_kv=kv_spec if cfg.is_hybrid else None,
+        length=P("batch"),
+    )
+
+
+def _decode_block(p, kind: str, x, cfg, cache):
+    if kind in ("dense", "moe"):
+        h = layers.apply_norm(p["ln1"], x, cfg.norm)
+        h, cache = attention.self_attention_decode(p["attn"], h, cfg, cache)
+        x = x + h
+        h = layers.apply_norm(p["ln2"], x, cfg.norm)
+        if kind == "moe":
+            h, _ = moe.apply_moe(p["moe"], h, cfg)
+        else:
+            h = layers.apply_mlp(p["mlp"], h, cfg.act)
+        return x + h, cache
+    h = layers.apply_norm(p["ln"], x, cfg.norm)
+    if kind == "mamba1":
+        h, cache = mamba.apply_mamba1_decode(p["mixer"], h, cfg, cache)
+    else:
+        h, cache = mamba.apply_mamba2_decode(p["mixer"], h, cfg, cache)
+    return x + h, cache
+
+
+def decode_step(
+    params: dict, token: Array, state: DecodeState, cfg: ModelConfig
+) -> tuple[Array, DecodeState]:
+    """token: (B, 1) int32 -> (logits (B, 1, V), new state)."""
+    pattern, n_super = layer_pattern(cfg)
+    x = layers.embed(params["embed"], token, ACT_DTYPE)
+    x = sharding.constrain(x, "batch", sharding.seq_axis(), "embed")
+    shared = params.get("shared_attn")
+
+    def scan_body(x, scanned):
+        block_params, caches, shared_kv = scanned
+        new_caches = []
+        for j, kind in enumerate(pattern):
+            x, c = _decode_block(block_params[j], kind, x, cfg, caches[j])
+            new_caches.append(c)
+        if cfg.is_hybrid:
+            x, shared_kv = _decode_block(shared, "dense", x, cfg, shared_kv)
+        return x, (tuple(new_caches), shared_kv)
+
+    x, (new_caches, new_shared) = jax.lax.scan(
+        scan_body, x,
+        (tuple(params["blocks"]), tuple(state.caches), state.shared_kv),
+    )
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed(head, x)
+    logits = sharding.constrain(logits, "batch", None, "vocab")
+    return logits, DecodeState(
+        caches=list(new_caches), shared_kv=new_shared,
+        length=state.length + 1,
+    )
+
+
+# --------------------------------------------------------------------------
+# Prefill: run the full sequence once, collecting per-layer caches
+# --------------------------------------------------------------------------
+
+def prefill_caches(
+    params: dict, tokens: Array, cfg: ModelConfig, max_len: int,
+    *, embeds: Optional[Array] = None,
+) -> DecodeState:
+    """Build a DecodeState holding the full-sequence KV / SSM states.
+
+    Implemented as a literal re-run of the blocks collecting K/V (attention)
+    or final states (SSM) — correctness-first; serving fuses this with
+    `forward` via `return_caches`.
+    """
+    pattern, n_super = layer_pattern(cfg)
+    b, s = tokens.shape
+    x = layers.embed(params["embed"], tokens, ACT_DTYPE)
+    if cfg.frontend and embeds is not None:
+        prefix = frontends.apply_projector(
+            params["projector"], embeds.astype(ACT_DTYPE), cfg
+        )
+        x = frontends.splice_prefix(x, prefix)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    shared = params.get("shared_attn")
+    lens = jnp.full((b,), s, jnp.int32)
+
+    def pad_kv(k, v):
+        pad = [(0, 0), (0, max_len - s), (0, 0), (0, 0)]
+        return KVCache(
+            k=jnp.pad(k, pad), v=jnp.pad(v, pad), length=lens
+        )
+
+    def attn_block_with_cache(p, x, kind):
+        h = layers.apply_norm(p["ln1"], x, cfg.norm)
+        q, k, v = attention.qkv_project(p["attn"], h, cfg, positions)
+        o = attention.attend(
+            q, k, v, causal=True, window=cfg.sliding_window,
+            logit_cap=cfg.attn_logit_softcap,
+        )
+        h = layers.matmul(o, p["attn"]["wo"], "bshk,hkd->bsd")
+        x = x + h
+        h2 = layers.apply_norm(p["ln2"], x, cfg.norm)
+        if kind == "moe":
+            h2, _ = moe.apply_moe(p["moe"], h2, cfg)
+        else:
+            h2 = layers.apply_mlp(p["mlp"], h2, cfg.act)
+        return x + h2, pad_kv(k, v)
+
+    def mamba_block_with_state(p, x, kind):
+        h = layers.apply_norm(p["ln"], x, cfg.norm)
+        if kind == "mamba1":
+            y, st = _mamba1_with_state(p["mixer"], h, cfg)
+        else:
+            y, st = _mamba2_with_state(p["mixer"], h, cfg)
+        return x + y, st
+
+    def scan_body(x, block_params):
+        new_caches = []
+        for j, kind in enumerate(pattern):
+            if kind in ("dense", "moe"):
+                x, c = attn_block_with_cache(block_params[j], x, kind)
+            else:
+                x, c = mamba_block_with_state(block_params[j], x, kind)
+            new_caches.append(c)
+        shared_c = None
+        if cfg.is_hybrid:
+            x, shared_c = attn_block_with_cache(shared, x, "dense")
+        return x, (tuple(new_caches), shared_c)
+
+    _, (caches, shared_kv) = jax.lax.scan(
+        scan_body, x, tuple(params["blocks"])
+    )
+    return DecodeState(caches=list(caches), shared_kv=shared_kv, length=lens)
+
+
+def _mamba1_with_state(p, x, cfg):
+    return mamba._mamba1_scan(p, x, cfg)
+
+
+def _mamba2_with_state(p, x, cfg):
+    return mamba._mamba2_scan(p, x, cfg)

@@ -1,0 +1,445 @@
+"""Selective state-space layers: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+Scan strategy
+-------------
+The diagonal recurrence  h_t = a_t * h_{t-1} + b_t  is evaluated with a
+*chunked associative scan*: `lax.scan` over chunks of `cfg.ssm_chunk` tokens
+carrying only the (B, d_inner, d_state) boundary state, with
+`lax.associative_scan` inside each chunk.  The (L, d_inner, d_state) tensor
+is therefore never materialized beyond one chunk — this is what makes the
+prefill_32k / long-context cells lower with bounded memory, and it is the
+structure the Pallas kernel (`repro.kernels.mamba_scan`) mirrors with VMEM
+tiles.  A naive O(L) scan lives in `ref_scan` as the oracle.
+
+Decode is a single-step state update (`*_decode`), carrying a conv ring
+buffer + the SSM state — the SSM analogue of a KV cache, O(1) in context
+length (why the 500k-token cell runs on the SSM/hybrid archs only).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# Core diagonal-recurrence scans
+# --------------------------------------------------------------------------
+
+def _assoc_combine(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return a1 * a2, a2 * b1 + b2
+
+
+def ref_scan(a: Array, b: Array, h0: Array) -> tuple[Array, Array]:
+    """Oracle: h_t = a_t h_{t-1} + b_t via lax.scan over time.
+
+    a, b: (B, L, ...) broadcast-compatible; h0: (B, ...).
+    Returns (hs (B, L, ...), h_final).
+    """
+
+    def body(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a_t = jnp.moveaxis(a, 1, 0)
+    b_t = jnp.moveaxis(b, 1, 0)
+    h_last, hs = jax.lax.scan(body, h0, (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def chunked_scan(a: Array, b: Array, h0: Array, chunk: int) -> tuple[Array, Array]:
+    """Chunked associative scan. a, b: (B, L, ...) broadcast-compatible
+    trailing dims (mamba2's decay is (B, L, nh, 1, 1)); L % chunk == 0.
+
+    NOTE: materializes hs for the full L — use only for small L / tests.
+    The production path is `fused_chunked_scan_m1/_m2`, which fold the
+    decay construction and the C-projection into the chunk loop so nothing
+    of size (L, d_inner, d_state) ever exists.
+    """
+    bsz, L = b.shape[0], b.shape[1]
+    n = L // chunk
+    rest = b.shape[2:]
+    a_c = a.reshape(bsz, n, chunk, *a.shape[2:])
+    b_c = b.reshape(bsz, n, chunk, *rest)
+
+    def body(h, ab):
+        ac, bc = ab  # (B, chunk, ...)
+        pa, pb = jax.lax.associative_scan(_assoc_combine, (ac, bc), axis=1)
+        hs = pa * h[:, None] + pb
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(
+        body, h0, (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(b_c, 1, 0))
+    )
+    hs = jnp.moveaxis(hs, 0, 1).reshape(bsz, L, *rest)
+    return hs, h_last
+
+
+def fused_chunked_scan_m1(
+    dt: Array,    # (B, L, di) fp32 — softplus'd step sizes
+    xc: Array,    # (B, L, di) conv output (post-silu)
+    b_t: Array,   # (B, L, ds)
+    c_t: Array,   # (B, L, ds)
+    a_mat: Array,  # (di, ds) negative decay matrix
+    h0: Array,    # (B, di, ds) fp32
+    chunk: int,
+) -> tuple[Array, Array]:
+    """Memory-bounded Mamba1 scan: per-chunk working set only.
+
+    Builds a = exp(dt*A) and b = dt*x*B INSIDE the chunk loop and folds the
+    C-projection, emitting y (B, L, di) — the (L, di, ds) tensor never
+    materializes (prefill_32k at d_inner=8192 would otherwise need TBs).
+    """
+    bsz, L, di = dt.shape
+    ds = a_mat.shape[1]
+    n = L // chunk
+
+    def rs(x):
+        return jnp.moveaxis(
+            x.reshape(bsz, n, chunk, *x.shape[2:]), 1, 0)
+
+    def body(h, inputs):
+        dt_c, xc_c, b_c, c_c = inputs           # (B, C, di) / (B, C, ds)
+        a = jnp.exp(dt_c[..., None] * a_mat)    # (B, C, di, ds)
+        bx = (dt_c * xc_c.astype(jnp.float32))[..., None] \
+            * b_c.astype(jnp.float32)[:, :, None, :]
+        pa, pb = jax.lax.associative_scan(_assoc_combine, (a, bx), axis=1)
+        hs = pa * h[:, None] + pb
+        y = jnp.einsum("bcds,bcs->bcd", hs, c_c.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(
+        body, h0, (rs(dt), rs(xc), rs(b_t), rs(c_t)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, L, di)
+    return y, h_last
+
+
+def fused_chunked_scan_m2(
+    dt: Array,    # (B, L, nh) fp32
+    xh: Array,    # (B, L, nh, hd)
+    b_t: Array,   # (B, L, ds)
+    c_t: Array,   # (B, L, ds)
+    a_h: Array,   # (nh,) negative per-head decay
+    h0: Array,    # (B, nh, hd, ds) fp32
+    chunk: int,
+) -> tuple[Array, Array]:
+    """Memory-bounded Mamba2/SSD scan; emits y (B, L, nh, hd)."""
+    bsz, L, nh = dt.shape
+    n = L // chunk
+
+    def rs(x):
+        return jnp.moveaxis(
+            x.reshape(bsz, n, chunk, *x.shape[2:]), 1, 0)
+
+    def body(h, inputs):
+        dt_c, xh_c, b_c, c_c = inputs
+        a = jnp.exp(dt_c * a_h)[..., None, None]          # (B,C,nh,1,1)
+        bx = (dt_c[..., None] * xh_c.astype(jnp.float32))[..., None] \
+            * b_c.astype(jnp.float32)[:, :, None, None, :]  # (B,C,nh,hd,ds)
+        pa, pb = jax.lax.associative_scan(_assoc_combine, (a, bx), axis=1)
+        hs = pa * h[:, None] + pb
+        y = jnp.einsum("bchds,bcs->bchd", hs, c_c.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(
+        body, h0, (rs(dt), rs(xh), rs(b_t), rs(c_t)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, L, nh, xh.shape[-1])
+    return y, h_last
+
+
+def causal_conv1d(x: Array, w: Array, bias: Array, state: Array | None = None):
+    """Depthwise causal conv. x: (B, L, C); w: (K, C); state: (B, K-1, C).
+
+    Returns (y (B, L, C), new_state (B, K-1, C)).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k)
+    )
+    y = y + bias.astype(x.dtype)
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y, new_state
+
+
+def _softplus(x):
+    return jax.nn.softplus(x)
+
+
+# --------------------------------------------------------------------------
+# Mamba1 (falcon-mamba-7b)
+# --------------------------------------------------------------------------
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return math.ceil(cfg.d_model / 16)
+
+
+def make_mamba1(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    r = dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real init for A; dt bias init so softplus(dt_bias) spans [1e-3, 1e-1]
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[5], (di,), jnp.float32)
+        * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3)
+    )
+    inv_dt = dt_init + jnp.log(-jnp.expm1(-dt_init))  # softplus^-1
+    return {
+        "in_proj": layers.dense_init(ks[0], d, (d, 2 * di), dtype),
+        "conv_w": layers.truncated_normal(ks[1], (dc, di), (1.0 / dc) ** 0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": layers.dense_init(ks[2], di, (di, r + 2 * ds), dtype),
+        "dt_proj": layers.truncated_normal(ks[3], (r, di), r ** -0.5, jnp.float32),
+        "dt_bias": inv_dt,
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], di, (di, d), dtype),
+    }
+
+
+def mamba1_spec(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": P("embed", "mlp"),
+        "conv_w": P(None, "mlp"),
+        "conv_b": P("mlp"),
+        "x_proj": P("mlp", None),
+        "dt_proj": P(None, "mlp"),
+        "dt_bias": P("mlp"),
+        "a_log": P("mlp", None),
+        "d_skip": P("mlp"),
+        "out_proj": P("mlp", "embed"),
+    }
+
+
+def _mamba1_ssm_inputs(p, xc: Array, cfg: ModelConfig):
+    """xc: conv output (B, L, di) -> (dt, b_t, c_t, a_mat); the decay and
+    input tensors of size (L, di, ds) are built lazily inside the scan."""
+    r, ds = dt_rank(cfg), cfg.ssm_state
+    proj = layers.matmul(xc, p["x_proj"])
+    dt_r, b_t, c_t = jnp.split(proj, [r, r + ds], axis=-1)
+    dt = jnp.einsum("blr,rd->bld", dt_r.astype(jnp.float32), p["dt_proj"])
+    dt = _softplus(dt + p["dt_bias"])                     # (B, L, di) fp32
+    a_mat = -jnp.exp(p["a_log"])                          # (di, ds)
+    return dt, b_t, c_t, a_mat
+
+
+def apply_mamba1(
+    p, x: Array, cfg: ModelConfig, *, use_kernel: bool = False
+) -> Array:
+    """Full-sequence Mamba1 mixer. x: (B, L, D)."""
+    y, _ = _mamba1_scan(p, x, cfg, use_kernel=use_kernel)
+    return y
+
+
+def _mamba1_scan(
+    p, x: Array, cfg: ModelConfig, *, use_kernel: bool = False
+) -> tuple[Array, "Mamba1State"]:
+    di = cfg.d_inner
+    xz = layers.matmul(x, p["in_proj"])
+    xr, z = jnp.split(xz, [di], axis=-1)
+    xc, conv_state = causal_conv1d(xr, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt, b_t, c_t, a_mat = _mamba1_ssm_inputs(p, xc, cfg)
+    h0 = jnp.zeros((x.shape[0], di, cfg.ssm_state), jnp.float32)
+    L = x.shape[1]
+    chunk = min(cfg.ssm_chunk, L)
+    if use_kernel and L % chunk == 0:
+        from repro.kernels.mamba_scan import ops as scan_ops
+
+        a = jnp.exp(dt[..., None] * a_mat)
+        bx = (dt * xc.astype(jnp.float32))[..., None] \
+            * b_t.astype(jnp.float32)[:, :, None, :]
+        hs, h_last = scan_ops.mamba_chunk_scan(a, bx, h0, chunk=chunk)
+        y = jnp.einsum("blds,bls->bld", hs, c_t.astype(jnp.float32))
+    elif L % chunk == 0:
+        y, h_last = fused_chunked_scan_m1(dt, xc, b_t, c_t, a_mat, h0, chunk)
+    else:
+        a = jnp.exp(dt[..., None] * a_mat)
+        bx = (dt * xc.astype(jnp.float32))[..., None] \
+            * b_t.astype(jnp.float32)[:, :, None, :]
+        hs, h_last = ref_scan(a, bx, h0)
+        y = jnp.einsum("blds,bls->bld", hs, c_t.astype(jnp.float32))
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = layers.matmul(y, p["out_proj"])
+    return out, Mamba1State(conv=conv_state, ssm=h_last)
+
+
+class Mamba1State(NamedTuple):
+    conv: Array  # (B, K-1, di)
+    ssm: Array   # (B, di, ds) fp32
+
+
+def init_mamba1_state(batch: int, cfg: ModelConfig, dtype) -> Mamba1State:
+    return Mamba1State(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    )
+
+
+def apply_mamba1_decode(
+    p, x: Array, cfg: ModelConfig, state: Mamba1State
+) -> tuple[Array, Mamba1State]:
+    """x: (B, 1, D) — one-token state update (the SSM 'KV cache' step)."""
+    di = cfg.d_inner
+    xz = layers.matmul(x, p["in_proj"])
+    xr, z = jnp.split(xz, [di], axis=-1)
+    xc, conv_state = causal_conv1d(xr, p["conv_w"], p["conv_b"], state.conv)
+    xc = jax.nn.silu(xc)
+    dt, b_t, c_t, a_mat = _mamba1_ssm_inputs(p, xc, cfg)
+    a = jnp.exp(dt[:, 0, :, None] * a_mat)                # (B, di, ds)
+    bx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+        * b_t[:, 0].astype(jnp.float32)[:, None, :]
+    h = a * state.ssm + bx                                # (B, di, ds)
+    y = jnp.einsum("bds,bs->bd", h, c_t[:, 0].astype(jnp.float32))
+    y = y + xc[:, 0].astype(jnp.float32) * p["d_skip"]
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    out = layers.matmul(y, p["out_proj"])
+    return out, Mamba1State(conv=conv_state, ssm=h)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 / SSD (zamba2)
+# --------------------------------------------------------------------------
+
+def n_ssm_heads(cfg: ModelConfig) -> int:
+    return cfg.d_inner // cfg.ssm_head_dim
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state  # x + B + C (n_groups = 1)
+
+
+def make_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh = n_ssm_heads(cfg)
+    cd = conv_dim(cfg)
+    ks = jax.random.split(key, 4)
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[3], (nh,), jnp.float32)
+        * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3)
+    )
+    inv_dt = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        # z | x | B | C | dt
+        "in_proj": layers.dense_init(ks[0], d, (d, 2 * di + 2 * ds + nh), dtype),
+        "conv_w": layers.truncated_normal(ks[1], (dc, cd), (1.0 / dc) ** 0.5, dtype),
+        "conv_b": jnp.zeros((cd,), dtype),
+        "dt_bias": inv_dt,
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "out_proj": layers.dense_init(ks[2], di, (di, d), dtype),
+    }
+
+
+def mamba2_spec(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": P("embed", "mlp"),
+        "conv_w": P(None, None),
+        "conv_b": P(None),
+        "dt_bias": P(None),
+        "a_log": P(None),
+        "d_skip": P(None),
+        "norm": {"scale": P("mlp")},
+        "out_proj": P("mlp", "embed"),
+    }
+
+
+def _mamba2_split(p, x: Array, cfg: ModelConfig):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, n_ssm_heads(cfg)
+    zxbcdt = layers.matmul(x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + conv_dim(cfg)], axis=-1)
+    return z, xbc, dt
+
+
+def _mamba2_ssm_inputs(p, xbc: Array, dt_raw: Array, cfg: ModelConfig):
+    """Returns (dt, xh, b_t, c_t, a_h) — decay built lazily in the scan."""
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, n_ssm_heads(cfg)
+    hd = cfg.ssm_head_dim
+    xr, b_t, c_t = jnp.split(xbc, [di, di + ds], axis=-1)
+    bsz, L = xr.shape[0], xr.shape[1]
+    xh = xr.reshape(bsz, L, nh, hd)
+    dt = _softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B, L, nh)
+    a_h = -jnp.exp(p["a_log"])                                  # (nh,)
+    return dt, xh, b_t, c_t, a_h
+
+
+def apply_mamba2(p, x: Array, cfg: ModelConfig) -> Array:
+    """Full-sequence Mamba2/SSD mixer. x: (B, L, D)."""
+    y, _ = _mamba2_scan(p, x, cfg)
+    return y
+
+
+def _mamba2_scan(p, x: Array, cfg: ModelConfig):
+    nh, hd, ds = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    z, xbc, dt_raw = _mamba2_split(p, x, cfg)
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    dt, xh, b_t, c_t, a_h = _mamba2_ssm_inputs(p, xbc, dt_raw, cfg)
+    h0 = jnp.zeros((x.shape[0], nh, hd, ds), jnp.float32)
+    L = x.shape[1]
+    chunk = min(cfg.ssm_chunk, L)
+    if L % chunk == 0:
+        y, h_last = fused_chunked_scan_m2(dt, xh, b_t, c_t, a_h, h0, chunk)
+    else:
+        a = jnp.exp(dt * a_h)[..., None, None]
+        bx = (dt[..., None] * xh.astype(jnp.float32))[..., None] \
+            * b_t.astype(jnp.float32)[:, :, None, None, :]
+        hs, h_last = ref_scan(a, bx, h0)
+        y = jnp.einsum("blhds,bls->blhd", hs, c_t.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(x.shape[0], L, cfg.d_inner)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = layers.apply_norm(p["norm"], y, "rmsnorm")
+    out = layers.matmul(y, p["out_proj"])
+    return out, Mamba2State(conv=conv_state, ssm=h_last)
+
+
+class Mamba2State(NamedTuple):
+    conv: Array  # (B, K-1, conv_dim)
+    ssm: Array   # (B, nh, hd, ds) fp32
+
+
+def init_mamba2_state(batch: int, cfg: ModelConfig, dtype) -> Mamba2State:
+    return Mamba2State(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim(cfg)), dtype),
+        ssm=jnp.zeros(
+            (batch, n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+    )
+
+
+def apply_mamba2_decode(
+    p, x: Array, cfg: ModelConfig, state: Mamba2State
+) -> tuple[Array, Mamba2State]:
+    z, xbc, dt_raw = _mamba2_split(p, x, cfg)
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"], state.conv)
+    xbc = jax.nn.silu(xbc)
+    dt, xh, b_t, c_t, a_h = _mamba2_ssm_inputs(p, xbc, dt_raw, cfg)
+    a = jnp.exp(dt[:, 0] * a_h)[..., None, None]          # (B,nh,1,1)
+    bx = (dt[:, 0, :, None] * xh[:, 0].astype(jnp.float32))[..., None] \
+        * b_t[:, 0].astype(jnp.float32)[:, None, None, :]
+    h = a * state.ssm + bx
+    y = jnp.einsum("bhds,bs->bhd", h, c_t[:, 0].astype(jnp.float32))
+    y = y + xh[:, 0].astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(x.shape[0], 1, cfg.d_inner).astype(x.dtype) * jax.nn.silu(z)
+    y = layers.apply_norm(p["norm"], y, "rmsnorm")
+    out = layers.matmul(y, p["out_proj"])
+    return out, Mamba2State(conv=conv_state, ssm=h)

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based dense dispatch.
+
+Covers the two assigned MoE archs:
+  * llama4-maverick — 128 experts, top-1, + 1 shared expert, MoE every 2nd layer
+  * grok-1          — 8 experts, top-2
+
+Dispatch is the dense einsum formulation (combine/dispatch one-hot tensors):
+it is deterministic-shape (capacity-bounded), EP-shardable along the expert
+axis via the logical "expert" rule, and lowers to all-to-all when experts are
+sharded.  Aux losses: load-balancing (Switch-style) + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: Array
+    router_z_loss: Array
+    expert_load: Array  # (E,) fraction of tokens routed per expert
+
+
+def make_moe(key, cfg: ModelConfig, dtype) -> dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3 = jax.random.split(ke, 3)
+    p = {
+        "router": layers.dense_init(kr, d, (d, e), jnp.float32),
+        "wi": layers.dense_init(k1, d, (e, d, f), dtype),
+        "wg": layers.dense_init(k2, d, (e, d, f), dtype),
+        "wo": layers.dense_init(k3, f, (e, f, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.make_mlp(ks, d, f * cfg.n_shared_experts, dtype)
+    return p
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    s = {
+        "router": P("embed", None),
+        "wi": P("expert", "embed", "mlp"),
+        "wg": P("expert", "embed", "mlp"),
+        "wo": P("expert", "mlp", "embed"),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = layers.mlp_spec()
+    return s
+
+
+DEFAULT_GROUP_TOKENS = 4096
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(tokens * cfg.n_experts_active * cfg.capacity_factor
+              / cfg.n_experts)
+    return max(cap, 1)
+
+
+def n_groups(t: int, cfg: ModelConfig) -> int:
+    """GShard-style dispatch groups: the one-hot dispatch einsum is
+    O(T x E·cap x D) with cap ∝ T — QUADRATIC in tokens if done globally
+    (a 1M-token grok prefill would cost 3e19 dispatch FLOPs, 100x the
+    experts themselves).  Grouping tokens into ~4k-token dispatch groups
+    bounds it to O(T x group x k·cf x D), the standard TPU formulation."""
+    if cfg.moe_groups > 0:
+        g = cfg.moe_groups
+    else:
+        g = max(t // DEFAULT_GROUP_TOKENS, 1)
+    while t % g:
+        g -= 1
+    return g
+
+
+def _moe_group(p, xt: Array, cfg: ModelConfig):
+    """Capacity-bounded top-k dispatch within one token group.
+
+    xt: (Tg, D) -> (out (Tg, D), f_e (E,), lb (), zl ())
+    """
+    e, k = cfg.n_experts, cfg.n_experts_active
+    t = xt.shape[0]
+    cap = _capacity(t, cfg)
+
+    # --- router (fp32) ---
+    logits = jnp.einsum(
+        "td,de->te", xt.astype(jnp.float32), p["router"],
+        preferred_element_type=jnp.float32,
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (Tg, k)
+    if k > 1:  # renormalize top-k gates (grok-1 style)
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- aux losses: E * sum_e(f_e * p_e) + router z-loss ---
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (Tg, k, E)
+    f_e = jnp.mean(jnp.sum(onehot, axis=1), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    lb = e * jnp.sum(f_e * p_e)
+    zl = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # --- capacity-bounded position assignment (slot-0 choices first) ---
+    flat_e = expert_idx.T.reshape(-1)            # (k*Tg,) slot-major
+    flat_g = gate_vals.T.reshape(-1)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)          # (kTg, E)
+    pos_in_e = jnp.cumsum(oh, axis=0) * oh - 1
+    pos = jnp.sum(pos_in_e * oh, axis=-1)                    # (kTg,)
+    keep = pos < cap
+    flat_g = jnp.where(keep, flat_g, 0.0)
+    pos = jnp.where(keep, pos, cap)              # overflow -> dropped scatter
+
+    # --- dispatch: (E, cap, D) expert inputs ---
+    tok_ids = jnp.tile(jnp.arange(t), k)
+    disp = jnp.zeros((e, cap + 1, t), dtype=xt.dtype)
+    disp = disp.at[flat_e, pos, tok_ids].add(1.0)[:, :cap, :]  # (E, cap, Tg)
+    expert_in = jnp.einsum("ect,td->ecd", disp, xt)
+
+    # --- expert MLPs (batched einsum over E) ---
+    g = jnp.einsum("ecd,edf->ecf", expert_in, p["wi"].astype(xt.dtype),
+                   preferred_element_type=jnp.float32).astype(xt.dtype)
+    u = jnp.einsum("ecd,edf->ecf", expert_in, p["wg"].astype(xt.dtype),
+                   preferred_element_type=jnp.float32).astype(xt.dtype)
+    a = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+    expert_out = jnp.einsum("ecf,efd->ecd", a * u, p["wo"].astype(xt.dtype),
+                            preferred_element_type=jnp.float32).astype(xt.dtype)
+
+    # --- combine: weighted gather back to tokens ---
+    comb = jnp.zeros((e, cap + 1, t), dtype=jnp.float32)
+    comb = comb.at[flat_e, pos, tok_ids].add(flat_g)[:, :cap, :]
+    out = jnp.einsum("ect,ecd->td", comb.astype(xt.dtype), expert_out)
+    return out, f_e, lb, zl
+
+
+def apply_moe(p, x: Array, cfg: ModelConfig) -> tuple[Array, MoEAux]:
+    """x: (B, S, D) -> (B, S, D) + aux losses (grouped dispatch)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    t = xt.shape[0]
+    g = n_groups(t, cfg)
+
+    if g == 1:
+        out, f_e, lb, zl = _moe_group(p, xt, cfg)
+    else:
+        xg = xt.reshape(g, t // g, d)
+        out, f_e, lb, zl = jax.vmap(
+            lambda xi: _moe_group(p, xi, cfg))(xg)
+        out = out.reshape(t, d)
+        f_e, lb, zl = jnp.mean(f_e, 0), jnp.mean(lb), jnp.mean(zl)
+
+    if cfg.n_shared_experts:
+        out = out + layers.apply_mlp(p["shared"], xt, cfg.act)
+
+    aux = MoEAux(load_balance_loss=lb, router_z_loss=zl, expert_load=f_e)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,3 @@
+"""Serving substrate: KV/SSM slot caches, continuous-batching engine with
+KF-arbitrated prefill/decode scheduling (the paper's technique at the
+serving layer)."""

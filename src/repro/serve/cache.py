@@ -1,0 +1,72 @@
+"""Slot-indexed decode caches: insert prefilled requests, free finished ones.
+
+`lm.DecodeState` stacks per-layer caches with a batch dimension = decode
+slots.  This module provides the slot algebra the engine needs: write a
+single prefilled request's cache into slot `i`, clear a slot, and track
+occupancy.  Works for every cache kind (attention KV, Mamba conv/ssm,
+hybrid shared-attn) because it operates structurally on the pytree.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def batch_axis_of(path_leaf_shape: tuple, stacked: bool) -> int:
+    """Caches are stacked (n_super, B, ...): slot axis is 1; engine-level
+    leaves like `length` are (B,): slot axis 0."""
+    return 1 if stacked else 0
+
+
+def insert_request(
+    state: lm.DecodeState, prefilled: lm.DecodeState, slot: int | Array
+) -> lm.DecodeState:
+    """Copy request-0 of `prefilled` (batch=1 state) into `slot` of `state`."""
+
+    def ins(dst: Array, src: Array, axis: int) -> Array:
+        idx = [slice(None)] * dst.ndim
+        idx[axis] = slot
+        return dst.at[tuple(idx)].set(jnp.take(src, 0, axis=axis))
+
+    new_caches = [
+        jax.tree.map(lambda d, s: ins(d, s, 1), dc, sc)
+        for dc, sc in zip(state.caches, prefilled.caches)
+    ]
+    shared = state.shared_kv
+    if shared is not None:
+        shared = jax.tree.map(
+            lambda d, s: ins(d, s, 1), shared, prefilled.shared_kv
+        )
+    length = state.length.at[slot].set(prefilled.length[0])
+    return lm.DecodeState(caches=new_caches, shared_kv=shared, length=length)
+
+
+def clear_slot(state: lm.DecodeState, slot: int | Array) -> lm.DecodeState:
+    """Zero a slot's length (cache contents become dead weight)."""
+    return lm.DecodeState(
+        caches=[
+            jax.tree.map(
+                lambda c: c.at[:, slot].set(jnp.zeros_like(c[:, slot]))
+                if isinstance(c, jax.Array) and c.ndim >= 2 else c,
+                cache,
+            )
+            for cache in state.caches
+        ],
+        shared_kv=state.shared_kv,
+        length=state.length.at[slot].set(0),
+    )
+
+
+def kv_occupancy(state: lm.DecodeState, max_len: int) -> float:
+    """Fraction of cache capacity holding live tokens — the engine's
+    'dramfull' (HBM pressure) telemetry signal."""
+    total = state.length.sum()
+    cap = state.length.shape[0] * max_len
+    return float(total) / float(cap)

@@ -1,0 +1,113 @@
+"""AdamW + global-norm clip + warmup-cosine schedule, pure-pytree.
+
+Moment dtype is configurable per arch (`cfg.optimizer_dtype`): the 314B/400B
+MoE configs use bf16 moments to fit the 16 GB/chip x 512 envelope; error
+introduced by bf16 moments is bounded by stochastic-rounding-free Adam's own
+epsilon floor and is the standard trade at that scale (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"   # float32 | bfloat16
+
+
+class OptState(NamedTuple):
+    step: Array   # () int32
+    mu: Any       # first moments (pytree like params)
+    nu: Any       # second moments
+
+
+def _mdtype(cfg: OptimizerConfig):
+    return jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+
+def init(cfg: OptimizerConfig, params: Any) -> OptState:
+    dt = _mdtype(cfg)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(
+        step=jnp.int32(0),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def schedule(cfg: OptimizerConfig, step: Array) -> Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, Array]:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def _decay_mask(path: tuple, p: Array) -> bool:
+    """No weight decay on 1-D tensors (norms, biases) — standard LLM recipe."""
+    return p.ndim >= 2
+
+
+def update(
+    cfg: OptimizerConfig, state: OptState, grads: Any, params: Any
+) -> tuple[Any, OptState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.betas
+    mdt = _mdtype(cfg)
+    # bias correction in fp32
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = mu32 / bc1
+        vhat = nu32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask((), p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+    flat = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = OptState(step=step, mu=new_mu, nu=new_nu)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_state_specs(param_specs: Any) -> OptState:
+    """Moments shard exactly like their parameters."""
+    from jax.sharding import PartitionSpec as P
+
+    return OptState(step=P(), mu=param_specs, nu=param_specs)

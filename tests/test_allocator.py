@@ -1,0 +1,103 @@
+"""Tests for the reconfiguration policy (paper §3.2 rules, §3.3 tables)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocator import (
+    PolicyConfig,
+    apply_policy,
+    init_policy_state,
+    sa_priority_pattern,
+    vc_partition,
+)
+
+CFG = PolicyConfig(warmup=10_000, hold=5_000, revert=10_000)
+
+
+def run_policy(signals_cycles, cfg=CFG):
+    """Apply the policy at (signal, cycle) pairs, returning applied configs."""
+    st_ = init_policy_state()
+    out = []
+    for sig, cyc in signals_cycles:
+        st_ = apply_policy(cfg, st_, jnp.int32(sig), jnp.int32(cyc))
+        out.append(int(st_.config))
+    return out
+
+
+def test_warmup_blocks_reconfiguration():
+    # paper: KF not activated until 10,000 cycles after start
+    configs = run_policy([(1, 1_000), (1, 5_000), (1, 9_999)])
+    assert configs == [0, 0, 0]
+    configs = run_policy([(1, 10_000)])
+    assert configs == [1]
+
+
+def test_hold_prevents_flapping():
+    # after a change, configuration is frozen for >= 5,000 cycles
+    configs = run_policy([(1, 10_000), (0, 12_000), (0, 14_999), (0, 15_000)])
+    assert configs == [1, 1, 1, 0]
+
+
+def test_revert_rule():
+    # staying boosted for > 10,000 cycles forces a fallback to equal share
+    configs = run_policy([(1, 10_000), (1, 15_000), (1, 20_001)])
+    assert configs == [1, 1, 0]
+
+
+def test_vc_partition_tables():
+    g0, c0 = vc_partition(jnp.int32(0), 4)
+    np.testing.assert_array_equal(g0, [True, True, False, False])
+    np.testing.assert_array_equal(c0, [False, False, True, True])
+    g1, c1 = vc_partition(jnp.int32(1), 4)
+    np.testing.assert_array_equal(g1, [True, True, True, False])
+    np.testing.assert_array_equal(c1, [False, False, False, True])
+
+
+def test_sa_pattern():
+    # config 0: round robin (-1); config 1: GPU,GPU,CPU repeating
+    assert int(sa_priority_pattern(jnp.int32(0), jnp.int32(0))) == -1
+    pat = [int(sa_priority_pattern(jnp.int32(1), jnp.int32(c))) for c in range(6)]
+    assert pat == [1, 1, 0, 1, 1, 0]
+
+
+@hypothesis.given(
+    sigs=st.lists(st.integers(0, 1), min_size=1, max_size=60),
+    step=st.integers(100, 3_000),
+)
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_property_partition_disjoint_and_complete(sigs, step):
+    """At every reachable policy state the VC masks partition the VC set,
+    so no VC is ever unowned (deadlock) or double-owned (class mixing)."""
+    st_ = init_policy_state()
+    for i, sig in enumerate(sigs):
+        st_ = apply_policy(CFG, st_, jnp.int32(sig), jnp.int32(i * step))
+        g, c = vc_partition(st_.config, 4)
+        assert bool(jnp.all(g ^ c))  # disjoint and covering
+
+
+@hypothesis.given(
+    sigs=st.lists(st.integers(0, 1), min_size=2, max_size=80),
+)
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_property_no_change_within_hold(sigs):
+    """Reallocation intervals respect the paper's 5,000-cycle minimum,
+    except the revert rule which may only move config back to 0."""
+    st_ = init_policy_state()
+    prev_cfg, prev_change_cycle = 0, None
+    for i, sig in enumerate(sigs):
+        cycle = 10_000 + i * 1_000
+        st_ = apply_policy(CFG, st_, jnp.int32(sig), jnp.int32(cycle))
+        cfg_now = int(st_.config)
+        if cfg_now != prev_cfg:
+            if prev_change_cycle is not None:
+                gap = cycle - prev_change_cycle
+                assert gap >= CFG.hold or cfg_now == 0  # revert is exempt
+            prev_change_cycle = cycle
+        prev_cfg = cfg_now
+
+
+def test_starvation_freedom_of_sa_pattern():
+    """Even in boosted mode the CPU gets a guaranteed arbitration phase."""
+    prefs = [int(sa_priority_pattern(jnp.int32(1), jnp.int32(c))) for c in range(30)]
+    assert prefs.count(0) == 10  # one CPU phase per 3 cycles

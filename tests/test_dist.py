@@ -1,0 +1,128 @@
+"""Distribution layer: sharding rules (divisibility + conflict fallback),
+int8-EF compression, pipeline parallelism (single-device degenerate)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import compress, sharding
+
+
+@pytest.fixture()
+def mesh_2d():
+    # single host device: mesh validation happens on SHAPES, so fabricate a
+    # 1x1; rule RESOLUTION is tested against a fake 16x16 via axis sizes
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Duck-typed mesh for rule resolution (no devices needed)."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        import numpy as _np
+
+        self.devices = _np.empty(shape)
+        self.size = int(_np.prod(shape))
+
+
+M16 = FakeMesh((16, 16), ("data", "model"))
+M3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_divisible_dims_shard():
+    spec = sharding.logical_to_mesh(P("batch", None, "embed"),
+                                    (256, 128, 1024), M16)
+    assert spec == P(("data",), None, None)
+
+
+def test_non_divisible_falls_back_to_replication():
+    # kv=2 heads on model=16: replicate
+    spec = sharding.logical_to_mesh(P("batch", None, "kv", None),
+                                    (256, 128, 2, 64), M16)
+    assert spec[2] is None
+
+
+def test_multipod_batch_uses_pod_and_data():
+    spec = sharding.logical_to_mesh(P("batch", None), (256, 64), M3)
+    assert spec[0] == ("pod", "data")
+
+
+def test_conflict_fallback_moe_weights():
+    # (expert, embed, mlp): expert claims model -> mlp falls to data (FSDP)
+    spec = sharding.logical_to_mesh(P("expert", "embed", "mlp"),
+                                    (128, 5120, 8192), M16)
+    assert spec == P(("model",), None, ("data",))
+
+
+def _axes(entry):
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+def test_conflict_fallback_kv_seq():
+    # kv divisible: kv takes model, kv_seq replicates
+    s1 = sharding.logical_to_mesh(P(None, "batch", "kv_seq", "kv", None),
+                                  (24, 128, 32768, 32, 64), M16)
+    assert _axes(s1[3]) == ("model",) and _axes(s1[2]) == ()
+    # kv NOT divisible: kv_seq claims model (seq-sharded cache)
+    s2 = sharding.logical_to_mesh(P(None, "batch", "kv_seq", "kv", None),
+                                  (24, 128, 32768, 8, 64), M16)
+    assert _axes(s2[3]) == () and _axes(s2[2]) == ("model",)
+
+
+def test_constrain_is_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert sharding.constrain(x, "batch", None) is x
+
+
+def test_quantize_ef_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 1, (256,)), jnp.float32)
+    r = jnp.zeros((256,))
+    q, scale, new_r = compress.quantize_ef(g, r)
+    deq = compress.dequantize(q, scale)
+    # quantization error <= scale/2 per element, and residual == error
+    np.testing.assert_allclose(np.asarray(g - deq), np.asarray(new_r),
+                               atol=1e-6)
+    assert float(jnp.max(jnp.abs(g - deq))) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_accumulates():
+    """With EF, the bias of repeated quantization vanishes: sum of
+    dequantized updates converges to the sum of true gradients."""
+    rng = np.random.default_rng(1)
+    true_g = jnp.asarray(rng.normal(0, 1, (64,)), jnp.float32) * 1e-3
+    r = jnp.zeros((64,))
+    total = jnp.zeros((64,))
+    for _ in range(50):
+        q, s, r = compress.quantize_ef(true_g, r)
+        total = total + compress.dequantize(q, s)
+    np.testing.assert_allclose(np.asarray(total),
+                               np.asarray(true_g * 50), atol=1e-3)
+
+
+def test_pipeline_single_stage_identity(mesh_2d):
+    """n_stages=1 degenerate pipeline == plain apply (the multi-stage path
+    is exercised by the dry-run's pp mode and the 8-device CI variant)."""
+    from repro.dist import pipeline
+
+    mesh = jax.make_mesh((1,), ("stage",))
+    w = jnp.full((1, 4, 4), 2.0)
+
+    def stage_fn(p, x):
+        return x @ p
+
+    mbs = jnp.ones((3, 2, 4))
+    out = pipeline.pipeline_apply(stage_fn, w, mbs, mesh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(mbs @ w[0]))
+
+
+def test_split_stages():
+    from repro.dist import pipeline
+
+    params = {"w": jnp.arange(24).reshape(6, 2, 2)}
+    out = pipeline.split_stages(params, 3)
+    assert out["w"].shape == (3, 2, 2, 2)

@@ -1,0 +1,89 @@
+"""System-level invariants: packet conservation in the NoC sim, SSM slot
+algebra in the serving engine, cross-pod group classification."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.noc.sim import run_workload
+
+
+@pytest.mark.parametrize("mode", ["baseline", "kf"])
+def test_noc_packet_conservation(mode):
+    """Completions can never exceed injections, injections never exceed
+    generation — across every epoch, cumulatively."""
+    res = run_workload(mode, "PATH", n_epochs=30)
+    c = res.counters
+    gen = np.cumsum(np.asarray(c.gpu_gen) + np.asarray(c.cpu_gen))
+    push = np.cumsum(np.asarray(c.gpu_push) + np.asarray(c.cpu_push))
+    done = np.cumsum(np.asarray(c.gpu_done) + np.asarray(c.cpu_done))
+    assert (push <= gen).all()
+    assert (done <= push).all()
+    # the network actually serves traffic
+    assert done[-1] > 0.5 * gen[-1]
+
+
+def test_noc_latency_positive_and_bounded():
+    res = run_workload("baseline", "LIB", n_epochs=30)
+    lat = np.asarray(res.avg_latency[5:])
+    assert (lat > 0).all()
+    assert (lat < 500).all()   # no runaway livelock
+
+
+def test_engine_with_ssm_arch():
+    """Slot insert/clear works for Mamba (conv+ssm) caches, not just KV."""
+    import repro.configs as configs
+    from repro.models import lm
+    from repro.serve import batching
+    from repro.serve.engine import Engine, EngineConfig
+
+    cfg = configs.smoke("falcon-mamba-7b")
+    params, _ = lm.make_lm(jax.random.PRNGKey(0), cfg)
+    wl = batching.WorkloadConfig(n_requests=8, mean_prompt=16, mean_gen=4,
+                                 seed=2)
+    eng = Engine(params, cfg, EngineConfig(
+        mode="kf", max_slots=2, max_len=48, budget_tokens=48,
+        warmup_iters=2))
+    stats = eng.run(batching.generate(wl), max_iters=400)
+    assert stats.summary()["n_finished"] == 8
+
+
+def test_crosses_pod_classifier():
+    from repro.launch.hlo_cost import _crosses_pod
+
+    # explicit groups within one pod
+    assert not _crosses_pod("x), replica_groups={{0,1,2,3}}, y", 256)
+    # explicit groups spanning pods
+    assert _crosses_pod("x), replica_groups={{0,256},{1,257}}, y", 256)
+    # plain iota, consecutive 16-groups: intra-pod
+    assert not _crosses_pod("x), replica_groups=[32,16]<=[512], y", 256)
+    # plain iota, one group of 512: spans both pods
+    assert _crosses_pod("x), replica_groups=[1,512]<=[512], y", 256)
+    # transposed iota (strided groups): pod-spanning
+    assert _crosses_pod(
+        "x), replica_groups=[256,2]<=[2,256]T(1,0), y", 256)
+    # no pod_size => never cross
+    assert not _crosses_pod("x), replica_groups={{0,256}}, y", None)
+
+
+def test_ring_swa_cache_matches_full_cache():
+    """SWA ring decode == full-cache decode for the in-window history."""
+    import repro.configs as configs
+    from repro.models import lm
+
+    cfg = configs.smoke("h2o-danube-1.8b")  # window 16
+    params, _ = lm.make_lm(jax.random.PRNGKey(3), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, 40), 0,
+                              cfg.vocab_size)
+    # ring cache: max_len capped at window inside init_decode_state
+    st_ring = lm.init_decode_state(1, 64, cfg)
+    assert st_ring.caches[0].k.shape[2] == cfg.sliding_window
+    logits_ring = None
+    for t in range(40):
+        logits_ring, st_ring = lm.decode_step(
+            params, toks[:, t:t + 1], st_ring, cfg)
+    # oracle: full forward, last-position logits
+    out = lm.forward(params, toks, cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits_ring[0, 0]), np.asarray(out.logits[0, -1]),
+        atol=3e-2, rtol=3e-2)  # bf16 activations

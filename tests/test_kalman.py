@@ -1,0 +1,127 @@
+"""Unit + property tests for the Kalman Filter core (paper Eqs. 1-5)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kalman
+
+jax.config.update("jax_enable_x64", False)
+
+
+def numpy_kf_step(a, b, h, q, r, x, p, z, u=None):
+    """Straightforward numpy oracle of Eqs. (1)-(5)."""
+    x_prior = a @ x + (b @ u if u is not None else 0.0)
+    p_prior = a @ p @ a.T + q
+    s = h @ p_prior @ h.T + r
+    k = p_prior @ h.T @ np.linalg.inv(s)
+    x_post = x_prior + k @ (z - h @ x_prior)
+    p_post = (np.eye(a.shape[0]) - k @ h) @ p_prior
+    return x_post, 0.5 * (p_post + p_post.T)
+
+
+def test_step_matches_numpy_oracle():
+    rng = np.random.default_rng(0)
+    n, m = 3, 2
+    a = rng.normal(size=(n, n)).astype(np.float32) * 0.5
+    h = rng.normal(size=(m, n)).astype(np.float32)
+    q = np.eye(n, dtype=np.float32) * 0.01
+    r = np.eye(m, dtype=np.float32) * 0.1
+    params = kalman.make_params(a, np.zeros((n, 1), np.float32), h, q, r)
+    state = kalman.init_state(n)
+    x, p = np.zeros(n, np.float32), np.eye(n, dtype=np.float32)
+    for i in range(20):
+        z = rng.normal(size=(m,)).astype(np.float32)
+        state, _, _ = kalman.step(params, state, jnp.asarray(z))
+        x, p = numpy_kf_step(a, np.zeros((n, 1)), h, q, r, x, p, z)
+        np.testing.assert_allclose(state.x, x, rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(state.p, p, rtol=2e-4, atol=2e-5)
+
+
+def test_filter_converges_on_linear_system():
+    """Tracking a slowly drifting scalar through noisy 3-dim observations."""
+    rng = np.random.default_rng(1)
+    T = 400
+    true = np.cumsum(rng.normal(scale=0.02, size=T)).astype(np.float32)
+    zs = true[:, None] + rng.normal(scale=0.3, size=(T, 3)).astype(np.float32)
+    params = kalman.paper_params(q=1e-3, r=0.3**2)
+    _, (xs, _) = kalman.filter_trace(params, kalman.init_state(1), jnp.asarray(zs))
+    est = np.asarray(xs)[:, 0]
+    # posterior should be much closer to the truth than raw observations
+    err_est = np.mean((est[50:] - true[50:]) ** 2)
+    err_obs = np.mean((zs[50:, 0] - true[50:]) ** 2)
+    assert err_est < 0.25 * err_obs
+
+
+def test_covariance_decreases_with_observations():
+    params = kalman.paper_params()
+    state = kalman.init_state(1, p0=10.0)
+    p_prev = float(state.p[0, 0])
+    for _ in range(5):
+        state, _, _ = kalman.step(params, state, jnp.zeros(3))
+        assert float(state.p[0, 0]) < p_prev
+        p_prev = float(state.p[0, 0])
+
+
+def test_binarize_semantics():
+    assert int(kalman.binarize(jnp.asarray(0.2))) == 1
+    assert int(kalman.binarize(jnp.asarray(-0.2))) == 0
+
+
+def test_normalize_observations_range():
+    lo, hi = jnp.zeros(3), jnp.full((3,), 100.0)
+    z = kalman.normalize_observations(jnp.asarray([0.0, 50.0, 250.0]), lo, hi)
+    np.testing.assert_allclose(z, [-1.0, 0.0, 1.0], atol=1e-6)
+
+
+@hypothesis.given(
+    q=st.floats(1e-6, 1.0),
+    r=st.floats(1e-4, 10.0),
+    zs=st.lists(
+        st.tuples(*[st.floats(-1, 1) for _ in range(3)]), min_size=1, max_size=30
+    ),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_property_covariance_stays_positive(q, r, zs):
+    """P_k must remain symmetric positive definite for any observation trace."""
+    params = kalman.paper_params(q=q, r=r)
+    state = kalman.init_state(1)
+    for z in zs:
+        state, _, _ = kalman.step(params, state, jnp.asarray(z, jnp.float32))
+    p = np.asarray(state.p)
+    assert np.all(np.isfinite(p))
+    assert p[0, 0] > 0.0
+
+
+@hypothesis.given(
+    z=st.tuples(*[st.floats(-1, 1) for _ in range(3)]),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_property_posterior_between_prior_and_obs(z):
+    """Scalar-state KF: the update moves the estimate toward the observation
+    mean without overshooting it (0 < kalman gain contraction < 1)."""
+    params = kalman.paper_params(q=1e-2, r=1e-1)
+    state = kalman.init_state(1)
+    z = jnp.asarray(z, jnp.float32)
+    post, prior, _ = kalman.step(params, state, z)
+    zbar = float(jnp.mean(z))
+    lo, hi = min(0.0, zbar), max(0.0, zbar)
+    assert lo - 1e-5 <= float(post.x[0]) <= hi + 1e-5
+
+
+def test_batched_matches_single():
+    params = kalman.paper_params()
+    B, T = 4, 10
+    rng = np.random.default_rng(2)
+    zs = rng.normal(size=(T, B, 3)).astype(np.float32)
+    states0 = kalman.KalmanState(
+        x=jnp.zeros((B, 1)), p=jnp.broadcast_to(jnp.eye(1), (B, 1, 1))
+    )
+    _, (xs, _) = kalman.batched_filter_trace(params, states0, jnp.asarray(zs))
+    for b in range(B):
+        _, (xs_b, _) = kalman.filter_trace(
+            params, kalman.init_state(1), jnp.asarray(zs[:, b])
+        )
+        np.testing.assert_allclose(xs[:, b], xs_b, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,116 @@
+"""System-behaviour tests for the NoC simulator (paper §4 evaluation rig)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.noc.sim import NoCConfig, run_workload, simulate, summarize
+from repro.core.noc.topology import make_topology
+from repro.core.noc.traffic import PROFILES
+
+FAST = dict(n_epochs=30, epoch_len=200)
+
+
+def total_buffer_capacity(cfg: NoCConfig, n_routers=36) -> int:
+    per_subnet = n_routers * 5 * cfg.vcs_per_subnet * cfg.buf_depth
+    in_mc = n_routers * (cfg.mc_queue_cap + 1)  # queue + staging
+    return cfg.n_subnets * per_subnet + in_mc
+
+
+class TestTopology:
+    def test_xy_routing_reaches_destination(self):
+        topo = make_topology()
+        for src in range(topo.n_routers):
+            for dst in range(topo.n_routers):
+                cur, hops = src, 0
+                while cur != dst:
+                    port = topo.route[cur, dst]
+                    assert port != 4, "local port before arrival"
+                    cur = topo.neighbor[cur, port]
+                    hops += 1
+                    assert hops <= 12, "path too long on a 6x6 mesh"
+                assert topo.route[cur, dst] == 4
+
+    def test_node_census(self):
+        topo = make_topology()
+        types = np.asarray(topo.node_type)
+        assert (types == 2).sum() == 8      # 8 MCs (Table 1)
+        assert (types == 1).sum() == 14     # 14 GPU chiplets
+        assert (types == 0).sum() == 14     # 14 CPU chiplets
+
+
+@pytest.mark.parametrize("mode", ["baseline", "fair", "kf", "4subnet"])
+def test_modes_run_and_produce_finite_metrics(mode):
+    res = run_workload(mode, "PATH", **FAST)
+    for leaf in [res.gpu_ipc, res.cpu_ipc, res.avg_latency]:
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+        assert bool(jnp.all(leaf >= 0))
+    assert res.gpu_ipc.shape == (FAST["n_epochs"],)
+
+
+def test_determinism():
+    a = run_workload("kf", "BFS", seed=7, **FAST)
+    b = run_workload("kf", "BFS", seed=7, **FAST)
+    np.testing.assert_array_equal(a.gpu_ipc, b.gpu_ipc)
+    np.testing.assert_array_equal(a.applied_config, b.applied_config)
+
+
+def test_packet_conservation():
+    """Injected packets are either completed or still buffered somewhere:
+    0 <= injected - completed <= total buffer capacity (+ MSHR in flight)."""
+    cfg = NoCConfig(mode="baseline", n_epochs=40, epoch_len=200)
+    res = simulate(cfg, PROFILES["STO"])
+    c = res.counters
+    injected = int(jnp.sum(c.gpu_push) + jnp.sum(c.cpu_push))
+    completed = int(jnp.sum(c.gpu_done) + jnp.sum(c.cpu_done))
+    assert completed <= injected
+    assert injected - completed <= total_buffer_capacity(cfg)
+
+
+def test_kf_reconfigures_only_in_kf_mode():
+    for mode in ["baseline", "fair", "4subnet"]:
+        res = run_workload(mode, "BFS", **FAST)
+        assert int(jnp.sum(res.applied_config)) == 0
+    res = run_workload("kf", "BFS", n_epochs=100, epoch_len=500, seed=1)
+    assert int(jnp.sum(res.applied_config)) > 0
+
+
+def test_kf_respects_warmup():
+    res = run_workload("kf", "BFS", n_epochs=60, epoch_len=500, seed=1)
+    # the KF may first act at the epoch boundary that reaches cycle 10,000,
+    # i.e. the end of epoch index 19 — everything before must stay config 0
+    assert int(jnp.sum(res.applied_config[:19])) == 0
+
+
+def test_vc_sweep_monotonic_gpu_side():
+    """Fig. 2: GPU throughput should not *decrease* when GPUs get more VCs."""
+    ipcs = []
+    for g in [1, 2, 3]:
+        res = run_workload(
+            "static", "MUM", static_gpu_vcs=g, n_epochs=60, epoch_len=500, seed=3
+        )
+        ipcs.append(summarize(res, warmup_epochs=10)["gpu_ipc"])
+    assert ipcs[-1] >= ipcs[0] - 0.01  # allow small noise
+
+
+def test_burst_correlates_with_stalls():
+    """Fig. 4: epochs with high GPU injection show more GPU stalls."""
+    res = run_workload("baseline", "BFS", n_epochs=100, epoch_len=500, seed=1)
+    gen = np.array(res.counters.gpu_gen, dtype=float)
+    stalls = np.array(res.counters.gpu_stall_icnt, dtype=float)
+    if gen.std() > 0 and stalls.std() > 0:
+        corr = np.corrcoef(gen, stalls)[0, 1]
+        assert corr > 0.5
+
+
+def test_four_subnet_low_load_latency_worst():
+    """Paper Fig. 11 mechanism: physical partitioning cannot share idle
+    bandwidth, so at non-saturated load its latency is the highest."""
+    lats = {}
+    for mode in ["baseline", "fair", "4subnet"]:
+        res = run_workload(mode, "PATH", n_epochs=40, epoch_len=300, seed=5)
+        gen = np.array(res.counters.gpu_gen)
+        lat = np.array(res.avg_latency)
+        low = gen < np.percentile(gen, 60)
+        lats[mode] = lat[low].mean()
+    assert lats["4subnet"] > lats["baseline"]
+    assert lats["4subnet"] > lats["fair"]

@@ -1,0 +1,96 @@
+"""Serving engine: correctness of slot algebra + the KF arbitration A/B
+(the paper's technique at the serving layer)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import lm
+from repro.serve import batching, cache as cache_lib
+from repro.serve.engine import Engine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.smoke("llama3.2-3b")
+    params, _ = lm.make_lm(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def test_insert_and_clear_slot(small_model):
+    params, cfg = small_model
+    state = lm.init_decode_state(4, 32, cfg)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    prefilled = lm.prefill_caches(params, toks, cfg, 32)
+    state = cache_lib.insert_request(state, prefilled, 2)
+    assert int(state.length[2]) == 8
+    assert int(state.length[0]) == 0
+    kv = state.caches[0]
+    assert bool(jnp.any(kv.k[:, 2] != 0))
+    assert not bool(jnp.any(kv.k[:, 0] != 0))
+    state = cache_lib.clear_slot(state, 2)
+    assert int(state.length[2]) == 0
+
+
+def test_decode_after_insert_matches_direct(small_model):
+    """Decoding through an engine slot == decoding the request directly."""
+    params, cfg = small_model
+    toks = jnp.arange(8, dtype=jnp.int32)[None, :]
+    direct = lm.prefill_caches(params, toks, cfg, 32)
+    lg_direct, _ = lm.decode_step(params, jnp.array([[9]], jnp.int32),
+                                  direct, cfg)
+
+    state = lm.init_decode_state(4, 32, cfg)
+    state = cache_lib.insert_request(state, direct, 1)
+    tok_b = jnp.zeros((4, 1), jnp.int32).at[1, 0].set(9)
+    lg_batch, _ = lm.decode_step(params, tok_b, state, cfg)
+    np.testing.assert_allclose(
+        np.asarray(lg_batch[1, 0]), np.asarray(lg_direct[0, 0]),
+        atol=2e-2, rtol=2e-2)  # bf16 activations
+
+
+def _run(mode, params, cfg, n_requests=24, seed=0):
+    wl = batching.WorkloadConfig(
+        n_requests=n_requests, mean_prompt=24, mean_gen=6, seed=seed)
+    reqs = batching.generate(wl)
+    ecfg = EngineConfig(mode=mode, max_slots=4, max_len=64,
+                        budget_tokens=64)
+    eng = Engine(params, cfg, ecfg)
+    return eng.run(reqs, max_iters=600).summary()
+
+
+def test_engine_completes_all_requests(small_model):
+    params, cfg = small_model
+    s = _run("rr", params, cfg, n_requests=12)
+    assert s["n_finished"] == 12
+
+
+def test_kf_reacts_to_bursts(small_model):
+    """Under bursty arrivals the KF engine must actually reconfigure."""
+    params, cfg = small_model
+    wl = batching.WorkloadConfig(n_requests=24, mean_prompt=40, mean_gen=6,
+                                 burst_rate=8.0, calm_rate=0.1, seed=3)
+    reqs = batching.generate(wl)
+    ecfg = EngineConfig(mode="kf", max_slots=4, max_len=64,
+                        budget_tokens=64, warmup_iters=2)
+    eng = Engine(params, cfg, ecfg)
+    stats = eng.run(reqs, max_iters=600)
+    assert stats.summary()["n_finished"] == 24
+    assert max(stats.configs) == 1          # boost engaged at least once
+    assert min(stats.configs) == 0          # and not permanently
+
+
+def test_hysteresis_hold(small_model):
+    """After a reconfiguration the config must hold >= hold_iters."""
+    params, cfg = small_model
+    wl = batching.WorkloadConfig(n_requests=20, mean_prompt=40, mean_gen=6,
+                                 burst_rate=8.0, calm_rate=0.1, seed=3)
+    ecfg = EngineConfig(mode="kf", max_slots=4, max_len=64,
+                        budget_tokens=64, warmup_iters=2, hold_iters=4)
+    eng = Engine(params, cfg, ecfg)
+    stats = eng.run(batching.generate(wl), max_iters=600)
+    cfgs = stats.configs
+    changes = [i for i in range(1, len(cfgs)) if cfgs[i] != cfgs[i - 1]]
+    for a, b in zip(changes, changes[1:]):
+        assert b - a >= ecfg.hold_iters

@@ -1,0 +1,124 @@
+"""Training loop fault tolerance: crash/restart bit-exactness, KF scheduler
+dispatch, loss-goes-down, comm-priority variant equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.data import synthetic
+from repro.dist.kf_scheduler import KFScheduler, SchedulerConfig
+from repro.dist.telemetry import StaticCosts, Telemetry
+from repro.train import loop as loop_lib
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+
+ARCH = "llama3.2-3b"
+
+
+def _setup(total_steps=30, seed=0):
+    cfg = configs.smoke(ARCH)
+    opt_cfg = opt_lib.OptimizerConfig(lr=1e-3, warmup_steps=5,
+                                      total_steps=total_steps)
+    state, _ = step_lib.init_train_state(jax.random.PRNGKey(seed), cfg,
+                                         opt_cfg)
+    ds = synthetic.make_dataset(cfg, seq_len=32, global_batch=2, seed=seed)
+    step = jax.jit(step_lib.make_train_step(cfg, opt_cfg))
+    return cfg, state, {0: step}, ds
+
+
+def test_loss_decreases():
+    _, state, steps, ds = _setup(total_steps=40)
+    res = loop_lib.run(loop_lib.LoopConfig(total_steps=40, log_every=0),
+                       state, steps, ds.batch, log=lambda s: None)
+    assert np.mean(res.losses[-5:]) < np.mean(res.losses[:5])
+
+
+def test_crash_restart_is_bit_identical(tmp_path):
+    """Run A: 0..30 uninterrupted.  Run B: crash at 18, restart from the
+    step-15 checkpoint, continue to 30.  Loss traces must agree exactly
+    from the restore point (same data stream, same state)."""
+    cfgdir = str(tmp_path / "ck")
+    _, state, steps, ds = _setup()
+    full = loop_lib.run(
+        loop_lib.LoopConfig(total_steps=30, log_every=0),
+        state, steps, ds.batch, log=lambda s: None)
+
+    _, state_b, steps_b, ds_b = _setup()
+    with pytest.raises(loop_lib.SimulatedFailure):
+        loop_lib.run(
+            loop_lib.LoopConfig(total_steps=30, ckpt_dir=cfgdir,
+                                ckpt_every=15, log_every=0),
+            state_b, steps_b, ds_b.batch, fail_at=18, log=lambda s: None)
+    _, state_c, steps_c, ds_c = _setup()
+    resumed = loop_lib.run(
+        loop_lib.LoopConfig(total_steps=30, ckpt_dir=cfgdir,
+                            ckpt_every=15, log_every=0),
+        state_c, steps_c, ds_c.batch, log=lambda s: None)
+    assert resumed.restored_from == 15
+    np.testing.assert_allclose(resumed.losses, full.losses[15:], rtol=1e-5)
+
+
+def test_kf_scheduler_switches_variants():
+    cfg, state, steps, ds = _setup(total_steps=60)
+    steps[1] = steps[0]  # same executable; dispatch path is what's tested
+    telemetry = Telemetry(costs_by_variant={
+        0: StaticCosts(flops=0, hbm_bytes=20e9, collective_bytes=2e9),
+        1: StaticCosts(flops=0, hbm_bytes=20e9, collective_bytes=5e8),
+    }, comm_scale=1e9)
+    sched = KFScheduler(SchedulerConfig(
+        epoch_steps=5, warmup_steps=10, hold_steps=5, revert_steps=1000),
+        telemetry)
+    res = loop_lib.run(loop_lib.LoopConfig(total_steps=60, log_every=0),
+                       state, steps, ds.batch, sched, log=lambda s: None)
+    # pressure is high (hbm 20/16GB) -> KF must engage the boost
+    assert 1 in res.variants
+    # and hysteresis: no flapping every epoch
+    flips = sum(1 for a, b in zip(res.variants, res.variants[1:]) if a != b)
+    assert flips <= 6
+
+
+def test_comm_priority_singlepod_matches_balanced():
+    """Microbatched grad accumulation == single-batch gradients (same
+    update within fp tolerance)."""
+    cfg = configs.smoke(ARCH)
+    opt_cfg = opt_lib.OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                      total_steps=10)
+    state, _ = step_lib.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    ds = synthetic.make_dataset(cfg, seq_len=32, global_batch=4)
+    batch = ds.batch(0)
+    s0 = jax.jit(step_lib.make_train_step(cfg, opt_cfg, variant=0))
+    s1 = jax.jit(step_lib.make_train_step(cfg, opt_cfg, variant=1))
+    new0, m0 = s0(state, batch)
+    new1, m1 = s1(state, batch)
+    # losses computed identically (mean over same tokens)
+    np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]),
+                               rtol=2e-2)
+    # parameters land in the same place (accumulated grads == full grads;
+    # bf16 params -> loose tolerance)
+    d0 = jax.tree.leaves(new0.params)[0].astype(jnp.float32)
+    d1 = jax.tree.leaves(new1.params)[0].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_straggler_detection():
+    import time
+
+    _, state, steps, ds = _setup(total_steps=12)
+    calls = {"n": 0}
+    inner = steps[0]
+
+    def slow_step(s, b):
+        calls["n"] += 1
+        out = inner(s, b)
+        jax.block_until_ready(out[1]["loss"])
+        if calls["n"] == 9:
+            time.sleep(1.0)  # inject a straggler
+        return out
+
+    res = loop_lib.run(
+        loop_lib.LoopConfig(total_steps=12, log_every=0,
+                            straggler_factor=2.5),
+        state, {0: slow_step}, ds.batch, log=lambda s: None)
+    assert res.straggler_events >= 1
