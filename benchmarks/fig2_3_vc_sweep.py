@@ -4,35 +4,48 @@ Sweeps the [GPU:CPU] VC partition {1:3, 2:2, 3:1} (paper's x-axis) over the
 four GPU workloads of Fig. 2/3 (PATH, LIB, STO, MUM; CPUs run the stable
 omnetpp-like profile).  Claim to validate: GPU IPC rises with more GPU VCs;
 CPU IPC barely moves (and can even dip when CPU packets pile into the MCs).
+
+The whole grid (workloads x ratios x seeds) runs through `sim.sweep` as one
+batched dispatch sharing a single compiled program; multi-seed replicas are
+therefore nearly free, and every cell reports mean +- std across seeds.
 """
 from __future__ import annotations
 
-import json
-
-from repro.core.noc.sim import run_workload, summarize
+from repro.core.noc.sim import SweepSpec, summarize_seeds, sweep
 
 WORKLOADS = ("PATH", "LIB", "STO", "MUM")
 RATIOS = (1, 2, 3)   # GPU VCs out of 4
+SEEDS = (0, 1, 2)
 
 
-def run(n_epochs: int = 60) -> dict:
-    out = {}
-    for wl in WORKLOADS:
-        row = {}
-        for g in RATIOS:
-            res = run_workload("static", wl, static_gpu_vcs=g,
-                               n_epochs=n_epochs)
-            row[f"{g}:{4 - g}"] = summarize(res)
-        out[wl] = row
-    return out
+def run(n_epochs: int = 60, seeds: tuple[int, ...] = SEEDS,
+        **overrides) -> dict:
+    specs = [
+        SweepSpec("static", wl, static_gpu_vcs=g, seed=s)
+        for wl in WORKLOADS for g in RATIOS for s in seeds
+    ]
+    rows = sweep(specs, n_epochs=n_epochs, **overrides)
+    by_point = {
+        (sp.workload, sp.static_gpu_vcs): [] for sp in specs
+    }
+    for sp, row in zip(specs, rows):
+        by_point[(sp.workload, sp.static_gpu_vcs)].append(row)
+    return {
+        wl: {
+            f"{g}:{4 - g}": summarize_seeds(by_point[(wl, g)])
+            for g in RATIOS
+        }
+        for wl in WORKLOADS
+    }
 
 
 def main():
     results = run()
-    print("workload,ratio,gpu_ipc,cpu_ipc,avg_latency")
+    print("workload,ratio,gpu_ipc,gpu_ipc_std,cpu_ipc,cpu_ipc_std,avg_latency")
     for wl, row in results.items():
         for ratio, s in row.items():
-            print(f"{wl},{ratio},{s['gpu_ipc']:.4f},{s['cpu_ipc']:.4f},"
+            print(f"{wl},{ratio},{s['gpu_ipc']:.4f},{s['gpu_ipc_std']:.4f},"
+                  f"{s['cpu_ipc']:.4f},{s['cpu_ipc_std']:.4f},"
                   f"{s['avg_latency']:.2f}")
     # headline claims
     for wl, row in results.items():

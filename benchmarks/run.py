@@ -4,9 +4,11 @@ adaptation A/B + kernel micro-benches.
     PYTHONPATH=src python -m benchmarks.run [--fast]
 
 The NoC figures reproduce the paper's evaluation qualitatively (synthetic
-workload profiles — DESIGN.md §2); the roofline table comes from the
-dry-run artifacts in results/dryrun (run repro.launch.dryrun first for the
-full 40-cell table).
+workload profiles — DESIGN.md §2) and all run on the batched sweep engine
+(DESIGN.md §4): one compiled program per network structure, every
+(mode, workload, ratio, seed) point dispatched in lockstep batches.  The
+roofline table comes from the dry-run artifacts in results/dryrun (run
+repro.launch.dryrun first for the full 40-cell table).
 """
 from __future__ import annotations
 
@@ -21,18 +23,21 @@ def _section(title):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
-                    help="fewer epochs for the NoC sims")
+                    help="fewer epochs / one seed for the NoC sims")
     args = ap.parse_args(argv)
     epochs = 30 if args.fast else 60
+    seeds = (0,) if args.fast else (0, 1, 2)
 
     t0 = time.time()
 
     _section("Fig 2/3 — IPC vs static VC allocation ratio")
     from benchmarks import fig2_3_vc_sweep
-    res = fig2_3_vc_sweep.run(n_epochs=epochs)
+    res = fig2_3_vc_sweep.run(n_epochs=epochs, seeds=seeds)
     for wl, row in res.items():
-        line = "  ".join(f"{r}: gpu={s['gpu_ipc']:.3f} cpu={s['cpu_ipc']:.3f}"
-                         for r, s in row.items())
+        line = "  ".join(
+            f"{r}: gpu={s['gpu_ipc']:.3f}±{s['gpu_ipc_std']:.3f} "
+            f"cpu={s['cpu_ipc']:.3f}"
+            for r, s in row.items())
         print(f"{wl:6s} {line}")
 
     _section("Fig 4 — dynamic traffic pattern (bursty GPU, stable CPU)")
@@ -45,12 +50,13 @@ def main(argv=None):
 
     _section("Figs 9/10/11 — four configurations")
     from benchmarks import fig9_10_11_configs
-    res = fig9_10_11_configs.run(n_epochs=epochs)
+    res = fig9_10_11_configs.run(n_epochs=epochs, seeds=seeds)
     wls = list(res)
     for wl in wls:
         row = res[wl]
         print(f"{wl:5s} " + "  ".join(
-            f"{m}: gpu={s['gpu_ipc']:.3f} lat={s['avg_latency']:.1f}"
+            f"{m}: gpu={s['gpu_ipc']:.3f}±{s['gpu_ipc_std']:.3f} "
+            f"lat={s['avg_latency']:.1f}"
             for m, s in row.items()))
     lat_wins = sum(res[w]["kf"]["avg_latency"]
                    <= res[w]["baseline"]["avg_latency"] for w in wls)
@@ -62,19 +68,36 @@ def main(argv=None):
 
     _section("Fig 12 — dynamic GPU IPC, fair vs KF")
     from benchmarks import fig12_dynamic_kf
-    tr = fig12_dynamic_kf.run(n_epochs=max(epochs, 100))
+    tr = fig12_dynamic_kf.run(n_epochs=max(epochs, 100), seeds=seeds)
     sl = slice(10, None)
     print(f"mean GPU IPC: fair {tr['fair_ipc'][sl].mean():.4f} "
           f"kf {tr['kf_ipc'][sl].mean():.4f}; "
           f"KF engaged {tr['kf_config'][sl].mean():.0%} of epochs")
 
+    _section("Sweep engine — serial vs batched wall-clock")
+    from benchmarks import bench_sweep
+    rec = bench_sweep.run(smoke=args.fast)
+    if not args.fast:
+        bench_sweep.append_record(rec)
+    print(f"serial {rec['serial_total_s']:.1f}s "
+          f"(compile {rec['serial_compile_s']:.1f}s) vs batched "
+          f"{rec['batched_total_s']:.1f}s "
+          f"(compile {rec['batched_compile_s']:.1f}s): "
+          f"{rec['speedup_end_to_end']:.1f}x end-to-end, "
+          f"{rec['speedup_steady']:.1f}x steady-state")
+
     _section("TPU adaptation — KF-arbitrated serving engine A/B")
-    from benchmarks import kf_scheduler_ab
-    res = kf_scheduler_ab.run()
-    for mode, s in res.items():
-        print(f"{mode:7s} ttft={s['mean_ttft']:.4f} p90={s['p90_ttft']:.4f} "
-              f"lat={s['mean_latency']:.4f} thr={s['throughput_tok_s']:.1f} "
-              f"kf_on={s['kf_on_frac']:.2f}")
+    try:
+        from benchmarks import kf_scheduler_ab
+    except ImportError as e:  # serving stack needs repro.dist (ROADMAP)
+        print(f"skipped: {e}")
+    else:
+        res = kf_scheduler_ab.run()
+        for mode, s in res.items():
+            print(f"{mode:7s} ttft={s['mean_ttft']:.4f} "
+                  f"p90={s['p90_ttft']:.4f} lat={s['mean_latency']:.4f} "
+                  f"thr={s['throughput_tok_s']:.1f} "
+                  f"kf_on={s['kf_on_frac']:.2f}")
 
     _section("Kernel micro-benches (interpret mode)")
     from benchmarks import kernels_bench

@@ -90,6 +90,82 @@ def apply_policy(
 # Configuration tables (paper §3.3, Figure 7/8)
 # ---------------------------------------------------------------------------
 
+class ModePolicy(NamedTuple):
+    """Traced policy tensors: everything a network *mode* means to the sim.
+
+    The simulator used to branch at trace time on ``cfg.mode`` — every mode
+    (and every static VC ratio) compiled its own XLA program.  A
+    ``ModePolicy`` lifts all of that into data so ``baseline``/``fair``/
+    ``static``/``kf`` share one compiled 2-subnet trace and can be stacked
+    along a batch axis for ``sim.simulate_batch`` (DESIGN.md §4).
+
+    Leaves may carry a leading batch dimension when stacked.
+    """
+
+    gpu_mask0: Array   # (V,) bool — VCs GPU packets may occupy, config = 0
+    cpu_mask0: Array   # (V,) bool
+    gpu_mask1: Array   # (V,) bool — masks when boosted (config = 1)
+    cpu_mask1: Array   # (V,) bool
+    sa_enable: Array   # ()  bool — enable the Fig. 8 SA preference pattern
+    kf_enable: Array   # ()  bool — let the KF hysteresis machine drive config
+
+
+def mode_policy(mode: str, n_vcs: int = 4, static_gpu_vcs: int = 2) -> ModePolicy:
+    """Build the traced policy tensors for one of the paper's modes.
+
+    baseline — VCs fully shared between classes, round-robin SA, no KF.
+    fair     — static equal VC partition, no KF.
+    static   — fixed [static_gpu_vcs : V - static_gpu_vcs] partition (Fig. 2/3).
+    kf       — equal partition when config=0, boosted partition + SA pattern
+               when config=1, KF drives config.
+    4subnet  — physical segregation: within a subnet every VC belongs to its
+               class, so both masks are full (the subnet index segregates).
+    """
+    ones = jnp.ones((n_vcs,), bool)
+    if mode in ("baseline", "4subnet"):
+        g0, c0 = ones, ones
+    elif mode == "fair":
+        g0, c0 = vc_partition(jnp.int32(0), n_vcs)
+    elif mode == "static":
+        g0 = jnp.arange(n_vcs) < static_gpu_vcs
+        c0 = ~g0
+    elif mode == "kf":
+        g0, c0 = vc_partition(jnp.int32(0), n_vcs)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    if mode == "kf":
+        g1, c1 = vc_partition(jnp.int32(1), n_vcs)
+    else:
+        g1, c1 = g0, c0  # config never leaves 0 when the KF is disabled
+    is_kf = mode == "kf"
+    return ModePolicy(
+        gpu_mask0=g0, cpu_mask0=c0, gpu_mask1=g1, cpu_mask1=c1,
+        sa_enable=jnp.asarray(is_kf), kf_enable=jnp.asarray(is_kf),
+    )
+
+
+def class_vc_masks(policy: ModePolicy, config: Array) -> tuple[Array, Array]:
+    """Select the (V,) GPU/CPU VC masks for the applied configuration."""
+    boosted = config > 0
+    gpu = jnp.where(boosted, policy.gpu_mask1, policy.gpu_mask0)
+    cpu = jnp.where(boosted, policy.cpu_mask1, policy.cpu_mask0)
+    return gpu, cpu
+
+
+def apply_policy_gated(
+    cfg: PolicyConfig,
+    policy: ModePolicy,
+    state: PolicyState,
+    kf_signal: Array,
+    cycle: Array,
+) -> PolicyState:
+    """`apply_policy` under a traced enable flag (no-op unless kf_enable)."""
+    new = apply_policy(cfg, state, kf_signal, cycle)
+    return jax.tree.map(
+        lambda n, o: jnp.where(policy.kf_enable, n, o), new, state
+    )
+
+
 def vc_partition(config: Array, n_vcs: int = 4) -> tuple[Array, Array]:
     """Return boolean masks (gpu_vcs, cpu_vcs) over VC indices.
 

@@ -20,12 +20,22 @@ Four network configurations (paper §4.2):
 
 The whole run is one jitted ``lax.scan`` over epochs with an inner scan over
 cycles; 36 routers x 4 VCs x depth 4 keeps per-cycle tensors tiny.
+
+Batched sweep engine (DESIGN.md §4)
+-----------------------------------
+``mode``, the static VC ratio, the workload rates, and the seed are all
+*traced* data (`allocator.ModePolicy` tensors + `traffic.WorkloadProfile`
+pytrees), so every 2-subnet configuration shares ONE compiled program; only
+the structurally different 4-subnet network compiles a second one.
+``simulate_batch`` vmaps that program over a leading batch axis (configs x
+workloads x seeds evaluated in lockstep, with donated carry buffers), and
+``sweep`` is the grouping driver the paper-figure benchmarks run on.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import NamedTuple
+from collections import defaultdict
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,12 +43,13 @@ import numpy as np
 
 from repro.core import kalman
 from repro.core.allocator import (
+    ModePolicy,
     PolicyConfig,
-    PolicyState,
-    apply_policy,
+    apply_policy_gated,
+    class_vc_masks,
     init_policy_state,
+    mode_policy,
     sa_priority_pattern,
-    vc_partition,
 )
 from repro.core.noc import metrics
 from repro.core.noc import router as rt
@@ -48,10 +59,45 @@ from repro.core.noc.traffic import (
     WorkloadProfile,
     init_phase,
     injection_rates,
+    stack_profiles,
     step_phase,
 )
 
 Array = jax.Array
+
+BCAP = 64  # per-node source-queue (shader/LSQ) capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class SimStatic:
+    """The structural (compile-time) part of a simulation config.
+
+    Everything the XLA program *shape* depends on.  Deliberately excludes
+    ``mode`` (except its 2-vs-4-subnet structure), the static VC ratio, and
+    the seed — those are traced, so all 2-subnet configurations share one
+    compiled executable (DESIGN.md §4).
+    """
+
+    four_subnet: bool
+    n_vcs: int
+    buf_depth: int
+    epoch_len: int
+    n_epochs: int
+    mc_queue_cap: int
+    mc_service_period: int
+    mshr_limit: int
+    policy: PolicyConfig
+    z_scales: tuple[float, float, float]
+    kf_q: float
+    kf_r: float
+
+    @property
+    def n_subnets(self) -> int:
+        return 4 if self.four_subnet else 2
+
+    @property
+    def vcs_per_subnet(self) -> int:
+        return self.n_vcs // 2 if self.four_subnet else self.n_vcs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +130,25 @@ class NoCConfig:
     @property
     def vcs_per_subnet(self) -> int:
         return self.n_vcs // 2 if self.mode == "4subnet" else self.n_vcs
+
+    def static_spec(self) -> SimStatic:
+        return SimStatic(
+            four_subnet=self.mode == "4subnet",
+            n_vcs=self.n_vcs,
+            buf_depth=self.buf_depth,
+            epoch_len=self.epoch_len,
+            n_epochs=self.n_epochs,
+            mc_queue_cap=self.mc_queue_cap,
+            mc_service_period=self.mc_service_period,
+            mshr_limit=self.mshr_limit,
+            policy=self.policy,
+            z_scales=tuple(self.z_scales),
+            kf_q=self.kf_q,
+            kf_r=self.kf_r,
+        )
+
+    def mode_policy(self) -> ModePolicy:
+        return mode_policy(self.mode, self.vcs_per_subnet, self.static_gpu_vcs)
 
 
 class MCState(NamedTuple):
@@ -132,97 +197,128 @@ class SimResult(NamedTuple):
     gpu_inj_rate: Array   # (E,) offered GPU load (Fig. 4 trace)
 
 
-def _class_masks(cfg: NoCConfig, config_idx: Array, n_vcs: int):
-    """(S, V) boolean masks for GPU / CPU occupancy per subnet."""
-    if cfg.mode == "baseline":
-        g = jnp.ones((n_vcs,), bool)
-        c = jnp.ones((n_vcs,), bool)
-    elif cfg.mode == "fair":
-        g, c = vc_partition(jnp.int32(0), n_vcs)
-    elif cfg.mode == "static":
-        idx = jnp.arange(n_vcs)
-        g = idx < cfg.static_gpu_vcs
-        c = ~g
-    elif cfg.mode == "kf":
-        g, c = vc_partition(config_idx, n_vcs)
-    elif cfg.mode == "4subnet":
-        # physical segregation: within a subnet every VC belongs to its class
-        g = jnp.ones((n_vcs,), bool)
-        c = jnp.ones((n_vcs,), bool)
-    else:
-        raise ValueError(cfg.mode)
-    S = cfg.n_subnets
-    return jnp.broadcast_to(g, (S, n_vcs)), jnp.broadcast_to(c, (S, n_vcs))
+def _make_kf(stc: SimStatic):
+    return kalman.paper_params(q=stc.kf_q, r=stc.kf_r)
 
 
-def _make_kf(cfg: NoCConfig):
-    return kalman.paper_params(q=cfg.kf_q, r=cfg.kf_r)
+def init_sim_state(stc: SimStatic, batch: int | None = None):
+    """Zero-initialized carry buffers (subnets, MC queues, source backlogs).
+
+    Built outside the jitted entry points so the batched path can donate
+    them: XLA then reuses the buffers in place instead of holding both the
+    init and the first-iteration copy live.
+    """
+    topo = make_topology()
+    R = topo.n_routers
+    S, V, B = stc.n_subnets, stc.vcs_per_subnet, stc.buf_depth
+
+    def z(shape, dtype=jnp.int32):
+        if batch is not None:
+            shape = (batch,) + shape
+        return jnp.zeros(shape, dtype)
+
+    subnets0 = rt.SubnetState(
+        buf_dest=z((S, R, rt.N_PORTS, V, B)),
+        buf_src=z((S, R, rt.N_PORTS, V, B)),
+        buf_cls=z((S, R, rt.N_PORTS, V, B)),
+        buf_birth=z((S, R, rt.N_PORTS, V, B)),
+        buf_binj=z((S, R, rt.N_PORTS, V, B)),
+        head=z((S, R, rt.N_PORTS, V)),
+        count=z((S, R, rt.N_PORTS, V)),
+        rr_ptr=z((S, R, rt.N_PORTS)),
+    )
+    mc0 = MCState(
+        q_src=z((R, stc.mc_queue_cap)),
+        q_cls=z((R, stc.mc_queue_cap)),
+        q_birth=z((R, stc.mc_queue_cap)),
+        head=z((R,)),
+        count=z((R,)),
+        timer=z((R,)),
+        stage_valid=z((R,), bool),
+        stage_dst=z((R,)),
+        stage_cls=z((R,)),
+        stage_birth=z((R,)),
+    )
+    outstanding0 = z((R,))
+    backlog0 = (z((R, BCAP)), z((R,)), z((R,)))
+    return subnets0, mc0, outstanding0, backlog0
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "profile"))
-def simulate(cfg: NoCConfig, profile: WorkloadProfile) -> SimResult:
+# Incremented each time XLA actually (re)traces the simulator — the
+# equivalence tests assert the whole paper sweep costs at most two traces.
+_trace_counter = [0]
+
+
+def trace_count() -> int:
+    return _trace_counter[0]
+
+
+def reset_trace_count() -> None:
+    _trace_counter[0] = 0
+
+
+def _simulate_impl(
+    stc: SimStatic,
+    mp: ModePolicy,
+    profile: WorkloadProfile,
+    seed: Array,
+    state0,
+) -> SimResult:
+    _trace_counter[0] += 1  # Python side effect: runs only at trace time
+
     topo = make_topology()
     route_t, nb_t, opp_t, ntype, mc_ids = rt.device_tables(topo)
     R = topo.n_routers
-    S = cfg.n_subnets
-    V = cfg.vcs_per_subnet
-    B = cfg.buf_depth
+    S = stc.n_subnets
+    V = stc.vcs_per_subnet
 
     is_mc = ntype == 2
     is_gpu = ntype == 1
     is_cpu = ntype == 0
     node_cls = jnp.where(is_gpu, 1, 0)  # class a node's own traffic belongs to
+    ar = jnp.arange(R)
 
-    # subnet routing of a node's traffic: (request_subnet, reply_subnet)
-    if cfg.mode == "4subnet":
+    # subnet routing of a node's traffic (request direction); the reply
+    # subnet additionally depends on the requester's class in 4-subnet mode.
+    if stc.four_subnet:
         req_sub = 2 * node_cls
-        rep_sub = 2 * node_cls + 1
+        sub_is_req = np.asarray([True, False, True, False])
     else:
         req_sub = jnp.zeros((R,), jnp.int32)
-        rep_sub = jnp.ones((R,), jnp.int32)
+        sub_is_req = np.asarray([True, False])
+    n_req_subs = int(sub_is_req.sum())
+    sub_ids = jnp.arange(S, dtype=jnp.int32)
 
-    subnets0 = jax.tree.map(
-        lambda *xs: jnp.stack(xs),
-        *[rt.init_subnet(R, V, B) for _ in range(S)],
-    )
-    mc0 = MCState(
-        q_src=jnp.zeros((R, cfg.mc_queue_cap), jnp.int32),
-        q_cls=jnp.zeros((R, cfg.mc_queue_cap), jnp.int32),
-        q_birth=jnp.zeros((R, cfg.mc_queue_cap), jnp.int32),
-        head=jnp.zeros((R,), jnp.int32),
-        count=jnp.zeros((R,), jnp.int32),
-        timer=jnp.zeros((R,), jnp.int32),
-        stage_valid=jnp.zeros((R,), bool),
-        stage_dst=jnp.zeros((R,), jnp.int32),
-        stage_cls=jnp.zeros((R,), jnp.int32),
-        stage_birth=jnp.zeros((R,), jnp.int32),
-    )
+    subnets0, mc0, outstanding0, backlog0 = state0
 
-    kf_params = _make_kf(cfg)
-    z_scales = jnp.asarray(cfg.z_scales, jnp.float32)
+    kf_params = _make_kf(stc)
+    z_scales = jnp.asarray(stc.z_scales, jnp.float32)
 
     vmapped_cycle = jax.vmap(
         rt.router_cycle, in_axes=(0, None, None, None, 0, 0, None, 0, 0)
     )
-
-    BCAP = 64  # per-node source-queue (shader/LSQ) capacity
+    # one injection attempt per (subnet, router); each subnet's state is
+    # independent, so the former per-subnet Python loop is a plain vmap
+    inject_subnets = jax.vmap(
+        rt.inject, in_axes=(0, None, 0, None, None, None, None, None, 0, 0)
+    )
 
     def cycle_body(carry, cycle_key):
         (subs, mc, phase, outstanding, backlog, cnt, policy, cycle) = carry
         bl_birth, bl_head, bl_count = backlog
-        key = cycle_key
-        k_phase, k_gen, k_dest = jax.random.split(key, 3)
+        k_phase, k_gen, k_dest = jax.random.split(cycle_key, 3)
+        cyc_vec = jnp.full((R,), cycle, jnp.int32)
 
         config_idx = policy.config
-        gpu_masks, cpu_masks = _class_masks(cfg, config_idx, V)
-        sa_pref = (
-            sa_priority_pattern(config_idx, cycle)
-            if cfg.mode == "kf"
-            else jnp.int32(-1)
+        g_vec, c_vec = class_vc_masks(mp, config_idx)          # (V,)
+        gpu_masks = jnp.broadcast_to(g_vec, (S, V))
+        cpu_masks = jnp.broadcast_to(c_vec, (S, V))
+        sa_pref = jnp.where(
+            mp.sa_enable, sa_priority_pattern(config_idx, cycle), jnp.int32(-1)
         )
 
         # subnet link activation: full width (2-subnet) or alternating (4-subnet)
-        if cfg.mode == "4subnet":
+        if stc.four_subnet:
             active = (cycle % 2) == (jnp.arange(S) % 2)
         else:
             active = jnp.ones((S,), bool)
@@ -230,56 +326,39 @@ def simulate(cfg: NoCConfig, profile: WorkloadProfile) -> SimResult:
         # MC acceptance applies to ejections on *request* subnets at MC nodes.
         # With multiple request subnets (4-subnet mode) up to S/2 packets can
         # arrive at one MC in a cycle, so reserve that many slots.
-        if cfg.mode == "4subnet":
-            sub_is_req = np.asarray([True, False, True, False])
-            n_req_subs = 2
-        else:
-            sub_is_req = np.asarray([True, False])
-            n_req_subs = 1
-        mc_space = mc.count <= cfg.mc_queue_cap - n_req_subs
+        mc_space = mc.count <= stc.mc_queue_cap - n_req_subs
         can_accept = jnp.where(is_mc, mc_space, True)  # (R,)
         accept_s = jnp.where(sub_is_req[:, None], can_accept[None, :], True)
 
-        # ---- 1. MC: inject staged replies into the reply subnet(s)
-        new_subs = subs
-        inj_ok_all = jnp.zeros((R,), bool)
-        for s in range(S):
-            sub_s = jax.tree.map(lambda x: x[s], new_subs)
-            if cfg.mode == "4subnet":
-                # reply subnet is determined by the requester's class
-                want = mc.stage_valid & is_mc & (2 * mc.stage_cls + 1 == s)
-            else:
-                want = mc.stage_valid & is_mc & (s == 1)
-            sub_s, ok = rt.inject(
-                sub_s,
-                jnp.arange(R),
-                want,
-                mc.stage_dst,
-                jnp.arange(R),
-                mc.stage_cls,
-                mc.stage_birth,
-                jnp.full((R,), cycle, jnp.int32),
-                gpu_masks[s],
-                cpu_masks[s],
-            )
-            new_subs = jax.tree.map(
-                lambda full, part: full.at[s].set(part), new_subs, sub_s
-            )
-            inj_ok_all = inj_ok_all | ok
-        mc = mc._replace(stage_valid=mc.stage_valid & ~inj_ok_all)
+        # ---- 1. MC: inject staged replies into the reply subnet(s),
+        # one batched scatter over all subnets (reply subnet of requester
+        # class c is 2c+1 in 4-subnet mode, subnet 1 otherwise)
+        if stc.four_subnet:
+            rep_target = 2 * mc.stage_cls + 1
+        else:
+            rep_target = jnp.ones((R,), jnp.int32)
+        want_rep = (
+            (sub_ids[:, None] == rep_target[None, :])
+            & (mc.stage_valid & is_mc)[None, :]
+        )
+        new_subs, ok_rep = inject_subnets(
+            subs, ar, want_rep, mc.stage_dst, ar,
+            mc.stage_cls, mc.stage_birth, cyc_vec, gpu_masks, cpu_masks,
+        )
+        mc = mc._replace(stage_valid=mc.stage_valid & ~jnp.any(ok_rep, axis=0))
 
         # ---- 2. MC service: tick timers, move head request -> staging
         can_serve = is_mc & (mc.count > 0) & ~mc.stage_valid
         timer = jnp.where(can_serve, jnp.maximum(mc.timer - 1, 0), mc.timer)
         done = can_serve & (timer == 0)
         hq = mc.head
-        src_out = mc.q_src[jnp.arange(R), hq]
-        cls_out = mc.q_cls[jnp.arange(R), hq]
-        birth_out = mc.q_birth[jnp.arange(R), hq]
+        src_out = mc.q_src[ar, hq]
+        cls_out = mc.q_cls[ar, hq]
+        birth_out = mc.q_birth[ar, hq]
         mc = mc._replace(
-            head=jnp.where(done, (mc.head + 1) % cfg.mc_queue_cap, mc.head),
+            head=jnp.where(done, (mc.head + 1) % stc.mc_queue_cap, mc.head),
             count=mc.count - done.astype(jnp.int32),
-            timer=jnp.where(done, cfg.mc_service_period, timer),
+            timer=jnp.where(done, stc.mc_service_period, timer),
             stage_valid=mc.stage_valid | done,
             stage_dst=jnp.where(done, src_out, mc.stage_dst),
             stage_cls=jnp.where(done, cls_out, mc.stage_cls),
@@ -293,30 +372,24 @@ def simulate(cfg: NoCConfig, profile: WorkloadProfile) -> SimResult:
         )
 
         # ---- 4. ejection handling
-        # request-subnet ejections at MC nodes -> enqueue into MC queue,
-        # sequentially per subnet (4-subnet mode can deliver two per cycle;
-        # `mc_space` reserved slots for all of them above).
+        # request-subnet ejections at MC nodes -> enqueue into MC queues.
+        # One scatter for all subnets: a per-subnet exclusive prefix count
+        # serializes same-MC arrivals into consecutive ring slots (4-subnet
+        # mode can deliver two per cycle; `mc_space` reserved slots above).
         req_ej = events.eject_valid & sub_is_req[:, None] & is_mc[None, :]  # (S,R)
-        for s in range(S):
-            if not bool(sub_is_req[s]):
-                continue
-            arrive = req_ej[s]
-            tail = (mc.head + mc.count) % cfg.mc_queue_cap
-            mc = mc._replace(
-                q_src=mc.q_src.at[jnp.arange(R), tail].set(
-                    jnp.where(arrive, events.eject_src[s],
-                              mc.q_src[jnp.arange(R), tail])
-                ),
-                q_cls=mc.q_cls.at[jnp.arange(R), tail].set(
-                    jnp.where(arrive, events.eject_cls[s],
-                              mc.q_cls[jnp.arange(R), tail])
-                ),
-                q_birth=mc.q_birth.at[jnp.arange(R), tail].set(
-                    jnp.where(arrive, events.eject_birth[s],
-                              mc.q_birth[jnp.arange(R), tail])
-                ),
-                count=mc.count + arrive.astype(jnp.int32),
-            )
+        arr_i = req_ej.astype(jnp.int32)
+        slot_off = jnp.cumsum(arr_i, axis=0) - arr_i
+        slot = (mc.head[None, :] + mc.count[None, :] + slot_off) % stc.mc_queue_cap
+        slot = jnp.where(req_ej, slot, stc.mc_queue_cap)  # OOB -> dropped write
+        r_ix = jnp.broadcast_to(ar[None, :], (S, R))
+        mc = mc._replace(
+            q_src=mc.q_src.at[r_ix, slot].set(events.eject_src, mode="drop"),
+            q_cls=mc.q_cls.at[r_ix, slot].set(events.eject_cls, mode="drop"),
+            q_birth=mc.q_birth.at[r_ix, slot].set(
+                events.eject_birth, mode="drop"
+            ),
+            count=mc.count + jnp.sum(arr_i, axis=0),
+        )
         # reply-subnet ejections at source nodes -> complete transactions
         rep_ej = events.eject_valid & (~sub_is_req)[:, None] & (~is_mc)[None, :]
         rep_done = jnp.any(rep_ej, axis=0)
@@ -337,29 +410,20 @@ def simulate(cfg: NoCConfig, profile: WorkloadProfile) -> SimResult:
         can_push = gen & (bl_count < BCAP)
         tail = (bl_head + bl_count) % BCAP
         tail = jnp.where(can_push, tail, BCAP)  # OOB -> dropped write
-        bl_birth = bl_birth.at[jnp.arange(R), tail].set(
-            jnp.full((R,), cycle, jnp.int32), mode="drop"
-        )
+        bl_birth = bl_birth.at[ar, tail].set(cyc_vec, mode="drop")
         bl_count = bl_count + can_push.astype(jnp.int32)
 
-        can_inj = (bl_count > 0) & (outstanding < cfg.mshr_limit) & ~is_mc
+        can_inj = (bl_count > 0) & (outstanding < stc.mshr_limit) & ~is_mc
         dests = jnp.take(
             mc_ids, jax.random.randint(k_dest, (R,), 0, mc_ids.shape[0])
         )
-        births = bl_birth[jnp.arange(R), bl_head]  # packet birth = generation
-        inj_ok = jnp.zeros((R,), bool)
-        for s in range(S):
-            sub_s = jax.tree.map(lambda x: x[s], new_subs)
-            want = can_inj & (req_sub == s)
-            sub_s, ok = rt.inject(
-                sub_s, jnp.arange(R), want, dests, jnp.arange(R),
-                node_cls, births, jnp.full((R,), cycle, jnp.int32),
-                gpu_masks[s], cpu_masks[s],
-            )
-            new_subs = jax.tree.map(
-                lambda full, part: full.at[s].set(part), new_subs, sub_s
-            )
-            inj_ok = inj_ok | ok
+        births = bl_birth[ar, bl_head]  # packet birth = generation
+        want_inj = (sub_ids[:, None] == req_sub[None, :]) & can_inj[None, :]
+        new_subs, ok_inj = inject_subnets(
+            new_subs, ar, want_inj, dests, ar,
+            node_cls, births, cyc_vec, gpu_masks, cpu_masks,
+        )
+        inj_ok = jnp.any(ok_inj, axis=0)
         bl_head = jnp.where(inj_ok, (bl_head + 1) % BCAP, bl_head)
         bl_count = bl_count - inj_ok.astype(jnp.int32)
         outstanding = outstanding + inj_ok.astype(jnp.int32)
@@ -396,7 +460,7 @@ def simulate(cfg: NoCConfig, profile: WorkloadProfile) -> SimResult:
 
     def epoch_body(carry, epoch_key):
         subs, mc, phase, outst, backlog, policy, kf_state, cycle = carry
-        keys = jax.random.split(epoch_key, cfg.epoch_len)
+        keys = jax.random.split(epoch_key, stc.epoch_len)
         inner0 = (subs, mc, phase, outst, backlog, _zero_counters(), policy, cycle)
         (subs, mc, phase, outst, backlog, cnt, policy, cycle), _ = jax.lax.scan(
             cycle_body, inner0, keys
@@ -413,8 +477,7 @@ def simulate(cfg: NoCConfig, profile: WorkloadProfile) -> SimResult:
         z = kalman.normalize_observations(raw, jnp.zeros(3), z_scales)
         kf_state, _, _ = kalman.step(kf_params, kf_state, z)
         signal = kalman.binarize(kf_state.x[0])
-        if cfg.mode == "kf":
-            policy = apply_policy(cfg.policy, policy, signal, cycle)
+        policy = apply_policy_gated(stc.policy, mp, policy, signal, cycle)
 
         # ---- IPC proxies (documented in metrics.py)
         gpu_ipc = metrics.gpu_ipc_proxy(
@@ -424,23 +487,18 @@ def simulate(cfg: NoCConfig, profile: WorkloadProfile) -> SimResult:
         cpu_ipc = metrics.cpu_ipc_proxy(cpu_lat)
         avg_lat = cnt.lat_sum / jnp.maximum(cnt.lat_cnt, 1)
         inj_rate = (cnt.gpu_push.astype(jnp.float32)
-                    / (cfg.epoch_len * jnp.sum(is_gpu)))
+                    / (stc.epoch_len * jnp.sum(is_gpu)))
 
         out = (gpu_ipc, cpu_ipc, avg_lat, signal, policy.config, cnt, inj_rate)
         return (subs, mc, phase, outst, backlog, policy, kf_state, cycle), out
 
-    key0 = jax.random.PRNGKey(cfg.seed)
-    epoch_keys = jax.random.split(key0, cfg.n_epochs)
-    backlog0 = (
-        jnp.zeros((R, 64), jnp.int32),   # birth ring buffer (BCAP=64)
-        jnp.zeros((R,), jnp.int32),      # head
-        jnp.zeros((R,), jnp.int32),      # count
-    )
+    key0 = jax.random.PRNGKey(seed)
+    epoch_keys = jax.random.split(key0, stc.n_epochs)
     carry0 = (
         subnets0,
         mc0,
         init_phase(),
-        jnp.zeros((R,), jnp.int32),
+        outstanding0,
         backlog0,
         init_policy_state(),
         kalman.init_state(1),
@@ -460,6 +518,161 @@ def simulate(cfg: NoCConfig, profile: WorkloadProfile) -> SimResult:
     )
 
 
+_SIM_JIT = jax.jit(_simulate_impl, static_argnums=0)
+
+_BATCH_JIT = None
+
+
+def _batch_jit():
+    """Batched entry: vmap over (policy tensors, profile, seed, carry).
+
+    Carry buffers are donated so XLA reuses the (B, S, R, P, V, B)-sized
+    state in place; CPU's runtime has no donation support, so skip it there
+    to avoid a warning per call.  Built lazily on first use — deciding at
+    import time would initialize the JAX backend before callers can
+    configure the platform (e.g. `jax.config.update("jax_platform_name")`).
+    """
+    global _BATCH_JIT
+    if _BATCH_JIT is None:
+        donate = () if jax.default_backend() == "cpu" else (4,)
+        _BATCH_JIT = jax.jit(
+            jax.vmap(_simulate_impl, in_axes=(None, 0, 0, 0, 0)),
+            static_argnums=0,
+            donate_argnums=donate,
+        )
+    return _BATCH_JIT
+
+
+def simulate(cfg: NoCConfig, profile: WorkloadProfile) -> SimResult:
+    """Run one configuration (compiles at most once per `SimStatic`)."""
+    stc = cfg.static_spec()
+    return _SIM_JIT(
+        stc,
+        cfg.mode_policy(),
+        profile,
+        jnp.int32(cfg.seed),
+        init_sim_state(stc),
+    )
+
+
+def _tree_rows(tree, sl):
+    return jax.tree.map(lambda x: x[sl], tree)
+
+
+def simulate_batch(
+    cfgs: Sequence[NoCConfig],
+    profiles: WorkloadProfile | Sequence[WorkloadProfile],
+    seeds: Sequence[int] | None = None,
+    batch_tile: int | None = None,
+) -> SimResult:
+    """Evaluate many configurations in lockstep: one compiled program,
+    one device dispatch per tile.
+
+    cfgs      — length-B configs; all must share the same `static_spec()`
+                (mode/ratio/seed may differ freely, those are traced).
+    profiles  — length-B workload profiles, or one profile for all rows.
+    seeds     — optional per-row seeds; defaults to each cfg's own seed.
+    batch_tile— if set, the batch is processed in fixed-size tiles (the last
+                one padded), so EVERY sweep in the process reuses the same
+                (tile-shaped) executable regardless of its batch size.
+
+    Returns a `SimResult` whose leaves carry a leading (B,) axis.
+    """
+    cfgs = list(cfgs)
+    if not cfgs:
+        raise ValueError("simulate_batch needs at least one config")
+    stc = cfgs[0].static_spec()
+    for c in cfgs[1:]:
+        if c.static_spec() != stc:
+            raise ValueError(
+                "all configs in a batch must share the same structural "
+                f"config; got {c.static_spec()} != {stc} — group with sweep()"
+            )
+    B = len(cfgs)
+    if isinstance(profiles, WorkloadProfile):
+        profiles = [profiles] * B
+    profiles = list(profiles)
+    if len(profiles) != B:
+        raise ValueError(f"{len(profiles)} profiles for {B} configs")
+    if seeds is None:
+        seeds = [c.seed for c in cfgs]
+    seeds = jnp.asarray(list(seeds), jnp.int32)
+    if seeds.shape[0] != B:
+        raise ValueError(f"{seeds.shape[0]} seeds for {B} configs")
+
+    mp = jax.tree.map(lambda *xs: jnp.stack(xs), *[c.mode_policy() for c in cfgs])
+    prof = stack_profiles(profiles)
+
+    tile = B if batch_tile is None else min(batch_tile, B)
+    parts = []
+    for lo in range(0, B, tile):
+        sl = slice(lo, min(lo + tile, B))
+        n = sl.stop - sl.start
+        mp_t, prof_t, seeds_t = (_tree_rows(t, sl) for t in (mp, prof, seeds))
+        if n < tile:  # pad the ragged tail by repeating row 0 (discarded)
+            pad = lambda x: jnp.concatenate(
+                [x, jnp.repeat(x[:1], tile - n, axis=0)], axis=0
+            )
+            mp_t, prof_t, seeds_t = (
+                jax.tree.map(pad, t) for t in (mp_t, prof_t, seeds_t)
+            )
+        out = _batch_jit()(stc, mp_t, prof_t, seeds_t, init_sim_state(stc, tile))
+        parts.append(_tree_rows(out, slice(0, n)))
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+
+class SweepSpec(NamedTuple):
+    """One row of a sweep: a network config x workload x seed point."""
+
+    mode: str
+    workload: str
+    static_gpu_vcs: int = 2
+    seed: int = 0
+
+
+# Tile size for sweep batches.  The paper sweeps (4 workloads x 3 ratios,
+# 6 workloads x {3 two-subnet modes, 4subnet}) are all multiples of 6 once
+# multiplied by any seed count, so 6 gives zero padding waste while keeping
+# every sweep on the same two executables (2-subnet + 4-subnet).
+SWEEP_TILE = 6
+
+
+def sweep(
+    specs: Sequence[SweepSpec],
+    batch_tile: int | None = SWEEP_TILE,
+    **overrides,
+) -> list[SimResult]:
+    """Run a heterogeneous sweep, batching rows that share an executable.
+
+    Rows are grouped by `static_spec()` (in practice: 2-subnet vs 4-subnet),
+    each group runs through `simulate_batch`, and results come back as one
+    `SimResult` per spec, in input order.  `overrides` are forwarded to every
+    row's `NoCConfig` (e.g. n_epochs=30).
+    """
+    specs = list(specs)
+    rows: list[SimResult | None] = [None] * len(specs)
+    groups: dict[SimStatic, list[int]] = defaultdict(list)
+    cfgs = []
+    for i, sp in enumerate(specs):
+        cfg = NoCConfig(
+            mode=sp.mode, static_gpu_vcs=sp.static_gpu_vcs, seed=sp.seed,
+            **overrides,
+        )
+        cfgs.append(cfg)
+        groups[cfg.static_spec()].append(i)
+    for idxs in groups.values():
+        res = simulate_batch(
+            [cfgs[i] for i in idxs],
+            [PROFILES[specs[i].workload] for i in idxs],
+            batch_tile=batch_tile,
+        )
+        for j, i in enumerate(idxs):
+            rows[i] = _tree_rows(res, j)
+    return rows
+
+
 def run_workload(mode: str, workload: str, **overrides) -> SimResult:
     cfg = NoCConfig(mode=mode, **overrides)
     return simulate(cfg, PROFILES[workload])
@@ -473,3 +686,14 @@ def summarize(res: SimResult, warmup_epochs: int = 10) -> dict:
         "avg_latency": float(jnp.mean(res.avg_latency[sl])),
         "kf_on_frac": float(jnp.mean(res.applied_config[sl])),
     }
+
+
+def summarize_seeds(rows: Sequence[SimResult], warmup_epochs: int = 10) -> dict:
+    """Aggregate one sweep point over its seed replicas: mean + `<k>_std`."""
+    per = [summarize(r, warmup_epochs) for r in rows]
+    out = {}
+    for k in per[0]:
+        vals = np.asarray([p[k] for p in per])
+        out[k] = float(vals.mean())
+        out[k + "_std"] = float(vals.std())
+    return out

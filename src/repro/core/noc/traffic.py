@@ -14,10 +14,16 @@ qualitative description:
 Each profile defines (rate_lo, rate_hi, p_enter_burst, p_exit_burst) for GPU
 nodes, in packets/node/cycle on the request subnet.  Rates are per GPU
 *chiplet* (2 SMs per tile, Table 1).
+
+``WorkloadProfile`` is a JAX pytree whose leaves are *rate scalars*, not a
+static hashable: the simulator traces over the rates, so every workload
+shares one compiled program (DESIGN.md §4).  Profile names live in the
+``PROFILES`` dict keys.  ``stack_profiles`` builds the batched (B,)-leaf
+profile pytree consumed by ``sim.simulate_batch``.
 """
 from __future__ import annotations
 
-import dataclasses
+from typing import Iterable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -25,17 +31,20 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
-@dataclasses.dataclass(frozen=True)
-class WorkloadProfile:
-    name: str
-    gpu_rate_lo: float
-    gpu_rate_hi: float
-    p_enter: float      # low -> high phase transition prob per cycle
-    p_exit: float       # high -> low
+class WorkloadProfile(NamedTuple):
+    """Markov-modulated Bernoulli injection parameters (a JAX pytree).
+
+    Leaves may be Python floats (single run) or (B,) arrays (batched sweep).
+    """
+
+    gpu_rate_lo: float | Array
+    gpu_rate_hi: float | Array
+    p_enter: float | Array      # low -> high phase transition prob per cycle
+    p_exit: float | Array       # high -> low
     # omnetpp is memory-heavy: 14 CPU tiles x 0.12 ~= 1.7 pkt/cycle of
     # stable demand — a meaningful share of the ~8 pkt/cycle MC ingress,
     # so CPU and GPU classes genuinely contend during GPU bursts.
-    cpu_rate: float = 0.12
+    cpu_rate: float | Array = 0.12
 
 
 # Burstiness/demand ordering mirrors the paper's figures: BFS and MUM show the
@@ -51,13 +60,21 @@ class WorkloadProfile:
 # and switch priority actually move throughput (via the MSHR feedback loop),
 # rather than a hard-saturated regime where only link capacity matters.
 PROFILES: dict[str, WorkloadProfile] = {
-    "PATH": WorkloadProfile("PATH", 0.06, 0.31, 0.00020, 0.00040),
-    "LIB": WorkloadProfile("LIB", 0.08, 0.33, 0.00025, 0.00035),
-    "STO": WorkloadProfile("STO", 0.12, 0.36, 0.00030, 0.00028),
-    "MUM": WorkloadProfile("MUM", 0.04, 0.38, 0.00025, 0.00020),
-    "BFS": WorkloadProfile("BFS", 0.03, 0.40, 0.00030, 0.00012),
-    "LPS": WorkloadProfile("LPS", 0.10, 0.35, 0.00028, 0.00030),
+    "PATH": WorkloadProfile(0.06, 0.31, 0.00020, 0.00040),
+    "LIB": WorkloadProfile(0.08, 0.33, 0.00025, 0.00035),
+    "STO": WorkloadProfile(0.12, 0.36, 0.00030, 0.00028),
+    "MUM": WorkloadProfile(0.04, 0.38, 0.00025, 0.00020),
+    "BFS": WorkloadProfile(0.03, 0.40, 0.00030, 0.00012),
+    "LPS": WorkloadProfile(0.10, 0.35, 0.00028, 0.00030),
 }
+
+
+def stack_profiles(profiles: Iterable[WorkloadProfile]) -> WorkloadProfile:
+    """Stack profiles into one pytree with (B,) float32 leaves (vmap axis 0)."""
+    rows = list(profiles)
+    return jax.tree.map(
+        lambda *xs: jnp.asarray(xs, jnp.float32), *rows
+    )
 
 
 def init_phase() -> Array:

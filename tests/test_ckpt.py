@@ -8,6 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip(
+    "repro.dist", reason="distribution subsystem not present in this build"
+)
+
 from repro.ckpt import elastic, io as ckpt_io
 
 

@@ -6,6 +6,10 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+pytest.importorskip(
+    "repro.dist", reason="distribution subsystem not present in this build"
+)
+
 from repro.dist import compress, sharding
 
 

@@ -13,6 +13,13 @@ def _compile(f, *args):
     return jax.jit(f).lower(*args).compile()
 
 
+def _cost(compiled) -> dict:
+    """`Compiled.cost_analysis()` returns a dict on newer jax, a one-element
+    list of dicts on older versions — normalize to the dict."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
 def test_matches_xla_on_straightline():
     def f(w, x):
         for _ in range(4):
@@ -21,8 +28,7 @@ def test_matches_xla_on_straightline():
 
     c = _compile(f, W, X)
     mine = hlo_cost.analyze_hlo(c.as_text())
-    xla = c.cost_analysis()
-    np.testing.assert_allclose(mine.flops, xla["flops"], rtol=0.01)
+    np.testing.assert_allclose(mine.flops, _cost(c)["flops"], rtol=0.01)
 
 
 def test_xla_undercounts_scan_and_we_fix_it():
@@ -40,8 +46,8 @@ def test_xla_undercounts_scan_and_we_fix_it():
 
     cs = _compile(scanned, W, X)
     cu = _compile(unrolled, W, X)
-    xla_s = cs.cost_analysis()["flops"]
-    xla_u = cu.cost_analysis()["flops"]
+    xla_s = _cost(cs)["flops"]
+    xla_u = _cost(cu)["flops"]
     assert xla_s < xla_u / 5  # XLA undercounts the scan ~10x
 
     mine_s = hlo_cost.analyze_hlo(cs.as_text()).flops

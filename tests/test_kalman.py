@@ -1,6 +1,9 @@
 """Unit + property tests for the Kalman Filter core (paper Eqs. 1-5)."""
-import hypothesis
-import hypothesis.strategies as st
+try:  # property tests are optional; unit tests run without hypothesis
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    hypothesis = None
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -76,39 +79,46 @@ def test_normalize_observations_range():
     np.testing.assert_allclose(z, [-1.0, 0.0, 1.0], atol=1e-6)
 
 
-@hypothesis.given(
-    q=st.floats(1e-6, 1.0),
-    r=st.floats(1e-4, 10.0),
-    zs=st.lists(
-        st.tuples(*[st.floats(-1, 1) for _ in range(3)]), min_size=1, max_size=30
-    ),
-)
-@hypothesis.settings(max_examples=25, deadline=None)
-def test_property_covariance_stays_positive(q, r, zs):
-    """P_k must remain symmetric positive definite for any observation trace."""
-    params = kalman.paper_params(q=q, r=r)
-    state = kalman.init_state(1)
-    for z in zs:
-        state, _, _ = kalman.step(params, state, jnp.asarray(z, jnp.float32))
-    p = np.asarray(state.p)
-    assert np.all(np.isfinite(p))
-    assert p[0, 0] > 0.0
+if hypothesis is not None:
 
+    @hypothesis.given(
+        q=st.floats(1e-6, 1.0),
+        r=st.floats(1e-4, 10.0),
+        zs=st.lists(
+            st.tuples(*[st.floats(-1, 1) for _ in range(3)]),
+            min_size=1, max_size=30,
+        ),
+    )
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_property_covariance_stays_positive(q, r, zs):
+        """P_k must remain symmetric positive definite for any trace."""
+        params = kalman.paper_params(q=q, r=r)
+        state = kalman.init_state(1)
+        for z in zs:
+            state, _, _ = kalman.step(params, state, jnp.asarray(z, jnp.float32))
+        p = np.asarray(state.p)
+        assert np.all(np.isfinite(p))
+        assert p[0, 0] > 0.0
 
-@hypothesis.given(
-    z=st.tuples(*[st.floats(-1, 1) for _ in range(3)]),
-)
-@hypothesis.settings(max_examples=25, deadline=None)
-def test_property_posterior_between_prior_and_obs(z):
-    """Scalar-state KF: the update moves the estimate toward the observation
-    mean without overshooting it (0 < kalman gain contraction < 1)."""
-    params = kalman.paper_params(q=1e-2, r=1e-1)
-    state = kalman.init_state(1)
-    z = jnp.asarray(z, jnp.float32)
-    post, prior, _ = kalman.step(params, state, z)
-    zbar = float(jnp.mean(z))
-    lo, hi = min(0.0, zbar), max(0.0, zbar)
-    assert lo - 1e-5 <= float(post.x[0]) <= hi + 1e-5
+    @hypothesis.given(
+        z=st.tuples(*[st.floats(-1, 1) for _ in range(3)]),
+    )
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_property_posterior_between_prior_and_obs(z):
+        """Scalar-state KF: the update moves the estimate toward the
+        observation mean without overshooting it (0 < gain contraction < 1)."""
+        params = kalman.paper_params(q=1e-2, r=1e-1)
+        state = kalman.init_state(1)
+        z = jnp.asarray(z, jnp.float32)
+        post, prior, _ = kalman.step(params, state, z)
+        zbar = float(jnp.mean(z))
+        lo, hi = min(0.0, zbar), max(0.0, zbar)
+        assert lo - 1e-5 <= float(post.x[0]) <= hi + 1e-5
+
+else:
+
+    def test_property_suite_needs_hypothesis():
+        pytest.skip("hypothesis not installed (pip install -e .[test])")
 
 
 def test_batched_matches_single():

@@ -8,6 +8,10 @@ import textwrap
 
 import pytest
 
+pytest.importorskip(
+    "repro.dist", reason="distribution subsystem not present in this build"
+)
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

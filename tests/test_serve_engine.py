@@ -5,6 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip(
+    "repro.dist", reason="distribution subsystem not present in this build"
+)
+
 import repro.configs as configs
 from repro.models import lm
 from repro.serve import batching, cache as cache_lib

@@ -1,0 +1,96 @@
+"""Batched sweep engine: equivalence with per-config runs + compile budget.
+
+The contract of `sim.simulate_batch` / `sim.sweep` (DESIGN.md §4):
+
+  1. a batch row is bit-for-bit the same simulation as a standalone
+     `simulate()` with the same config/workload/seed;
+  2. the whole paper evaluation (Fig 2/3 grid + Fig 9/10/11 grid) costs at
+     most TWO traces of the simulator — the unified 2-subnet program and
+     the structurally different 4-subnet one.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.noc import sim
+from repro.core.noc.sim import NoCConfig, SweepSpec
+from repro.core.noc.traffic import PROFILES
+
+FAST = dict(n_epochs=8, epoch_len=100)
+
+
+def _assert_rows_equal(row, ref, label):
+    for (path, a), (_, b) in zip(
+        jax.tree_util.tree_leaves_with_path(row),
+        jax.tree_util.tree_leaves_with_path(ref),
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-6, rtol=1e-6,
+            err_msg=f"{label}: leaf {jax.tree_util.keystr(path)}",
+        )
+
+
+SPECS = [
+    SweepSpec(mode, wl, seed=seed)
+    for mode in ("baseline", "fair", "kf", "4subnet")
+    for wl in ("PATH", "BFS")
+    for seed in (0, 3)
+] + [
+    SweepSpec("static", wl, static_gpu_vcs=g, seed=1)
+    for wl in ("PATH", "BFS")
+    for g in (1, 2, 3)
+]
+
+
+def test_sweep_rows_match_per_config_simulate():
+    """Every mode/workload/ratio/seed: batch row == standalone simulate."""
+    rows = sim.sweep(SPECS, batch_tile=4, **FAST)
+    for sp, row in zip(SPECS, rows):
+        cfg = NoCConfig(mode=sp.mode, static_gpu_vcs=sp.static_gpu_vcs,
+                        seed=sp.seed, **FAST)
+        ref = sim.simulate(cfg, PROFILES[sp.workload])
+        _assert_rows_equal(row, ref, f"{sp.mode}/{sp.workload}/g{sp.static_gpu_vcs}/s{sp.seed}")
+
+
+def test_paper_sweeps_compile_at_most_twice():
+    """Fig 2/3 + Fig 9/10/11 together: <= 2 traces (2-subnet + 4-subnet)."""
+    from benchmarks import fig2_3_vc_sweep, fig9_10_11_configs
+
+    mini = dict(n_epochs=3, epoch_len=150, seeds=(0,))
+    sim.reset_trace_count()
+    fig2_3_vc_sweep.run(**mini)
+    fig9_10_11_configs.run(**mini)
+    assert sim.trace_count() <= 2, (
+        f"paper sweeps traced simulate {sim.trace_count()} times; the "
+        "2-subnet modes must share one program and 4subnet adds the other"
+    )
+
+
+def test_batch_profile_broadcast_and_seed_override():
+    cfgs = [NoCConfig(mode="fair", seed=9, **FAST)] * 2
+    res = sim.simulate_batch(cfgs, PROFILES["LIB"], seeds=(9, 9))
+    _assert_rows_equal(
+        jax.tree.map(lambda x: x[0], res),
+        jax.tree.map(lambda x: x[1], res),
+        "identical rows",
+    )
+    ref = sim.simulate(cfgs[0], PROFILES["LIB"])
+    _assert_rows_equal(jax.tree.map(lambda x: x[0], res), ref, "vs single")
+
+
+def test_batch_rejects_mixed_structures():
+    cfgs = [NoCConfig(mode="baseline", **FAST), NoCConfig(mode="4subnet", **FAST)]
+    with pytest.raises(ValueError, match="structural"):
+        sim.simulate_batch(cfgs, PROFILES["PATH"])
+
+
+def test_summarize_seeds_reports_mean_and_std():
+    specs = [SweepSpec("fair", "PATH", seed=s) for s in (0, 1)]
+    rows = sim.sweep(specs, **FAST)
+    agg = sim.summarize_seeds(rows, warmup_epochs=2)
+    per = [sim.summarize(r, warmup_epochs=2) for r in rows]
+    assert agg["gpu_ipc"] == pytest.approx(
+        (per[0]["gpu_ipc"] + per[1]["gpu_ipc"]) / 2
+    )
+    assert agg["gpu_ipc_std"] >= 0.0
+    assert "avg_latency_std" in agg
