@@ -1,0 +1,69 @@
+"""Perf-trajectory harness for the fleet KF bank.
+
+Times `FleetKF.epoch` (one banked predict+correct cycle through the Pallas
+kf_bank kernel) at fleet sizes n in {64, 1024} filters and appends a record
+to BENCH_noc.json, extending the perf trajectory started by bench_sweep to
+the distribution subsystem.
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet_kf [--no-append]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_sweep import append_record
+from repro.dist.kf_scheduler import FleetKF, SchedulerConfig
+
+SIZES = (64, 1024)
+
+
+def time_epoch(n: int, iters: int = 200, seed: int = 0) -> dict:
+    fleet = FleetKF(n, SchedulerConfig(kf_q=1e-2, kf_r=1e-1))
+    zs = jnp.asarray(
+        np.random.default_rng(seed).normal(0, 0.5, (iters, n, 3)),
+        jnp.float32)
+    jax.block_until_ready(fleet.epoch(zs[0]))  # compile + first dispatch
+    t0 = time.perf_counter()
+    for t in range(iters):
+        sig = fleet.epoch(zs[t])
+    jax.block_until_ready(sig)
+    dt = (time.perf_counter() - t0) / iters
+    return {
+        "n_filters": n,
+        "iters": iters,
+        "epoch_us": round(dt * 1e6, 2),
+        "ns_per_filter": round(dt * 1e9 / n, 1),
+    }
+
+
+def run(sizes=SIZES) -> list[dict]:
+    return [time_epoch(n) for n in sizes]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-append", action="store_true",
+                    help="print only; don't extend BENCH_noc.json")
+    args = ap.parse_args(argv)
+    points = run()
+    rec = {
+        "bench": "fleet_kf_epoch",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "points": points,
+    }
+    print(json.dumps(rec, indent=2))
+    if not args.no_append:
+        append_record(rec)
+        print("appended to BENCH_noc.json")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -87,17 +87,19 @@ def main(argv=None):
           f"{rec['speedup_steady']:.1f}x steady-state")
 
     _section("TPU adaptation — KF-arbitrated serving engine A/B")
-    try:
-        from benchmarks import kf_scheduler_ab
-    except ImportError as e:  # serving stack needs repro.dist (ROADMAP)
-        print(f"skipped: {e}")
-    else:
-        res = kf_scheduler_ab.run()
-        for mode, s in res.items():
-            print(f"{mode:7s} ttft={s['mean_ttft']:.4f} "
-                  f"p90={s['p90_ttft']:.4f} lat={s['mean_latency']:.4f} "
-                  f"thr={s['throughput_tok_s']:.1f} "
-                  f"kf_on={s['kf_on_frac']:.2f}")
+    from benchmarks import kf_scheduler_ab
+    res = kf_scheduler_ab.run()
+    for mode, s in res.items():
+        print(f"{mode:7s} ttft={s['mean_ttft']:.4f} "
+              f"p90={s['p90_ttft']:.4f} lat={s['mean_latency']:.4f} "
+              f"thr={s['throughput_tok_s']:.1f} "
+              f"kf_on={s['kf_on_frac']:.2f}")
+
+    _section("Fleet-KF bank — per-epoch filter-bank timings")
+    from benchmarks import bench_fleet_kf
+    for r in bench_fleet_kf.run():
+        print(f"n={r['n_filters']:5d} epoch={r['epoch_us']:.1f}us "
+              f"({r['ns_per_filter']:.0f}ns/filter)")
 
     _section("Kernel micro-benches (interpret mode)")
     from benchmarks import kernels_bench

@@ -42,16 +42,6 @@ class SubnetState(NamedTuple):
     rr_ptr: Array     # (R, P) round-robin pointer over P*V requester index
 
 
-def init_subnet(n_routers: int, n_vcs: int, depth: int) -> SubnetState:
-    shape = (n_routers, N_PORTS, n_vcs, depth)
-    z4 = jnp.zeros(shape, dtype=jnp.int32)
-    z3 = jnp.zeros(shape[:3], dtype=jnp.int32)
-    return SubnetState(
-        buf_dest=z4, buf_src=z4, buf_cls=z4, buf_birth=z4, buf_binj=z4,
-        head=z3, count=z3, rr_ptr=jnp.zeros((n_routers, N_PORTS), jnp.int32),
-    )
-
-
 class CycleEvents(NamedTuple):
     """Per-cycle outputs consumed by metrics / the MC model."""
 

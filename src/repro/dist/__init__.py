@@ -1,0 +1,24 @@
+"""repro.dist — the distribution subsystem.
+
+The paper predicts per-link bandwidth demand with a Kalman filter and
+reallocates NoC resources between pre-defined router configurations; this
+package applies the same technique one layer up, to a training/serving
+fleet (DESIGN.md §9):
+
+  sharding      logical-axis -> mesh-axis resolution (divisibility checks,
+                conflict fallback to FSDP, multi-pod batch axes)
+  compress      int8 error-feedback gradient quantization for the
+                cross-pod (DCI) wire of the comm-priority step variant
+  pipeline      GPipe-style pipeline parallelism over a `stage` mesh axis
+  kf_scheduler  KFScheduler (variant dispatch) + FleetKF (one banked
+                filter per pod x traffic-class, on the Pallas kf_bank)
+  telemetry     step timers + static cost models -> the KF's three
+                normalized observations (the paper's counters, fleet-scale)
+"""
+from repro.dist import (  # noqa: F401
+    compress,
+    kf_scheduler,
+    pipeline,
+    sharding,
+    telemetry,
+)

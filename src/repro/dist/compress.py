@@ -1,0 +1,42 @@
+"""int8 gradient compression with error feedback (EF).
+
+Used by the comm-priority train-step variant (train/step.py): the per-chip
+gradient shard is quantized to int8 for the cross-pod (DCI) all-gather —
+1 byte/element on the expensive wire — and the quantization error is kept
+locally and added back into the next step's gradient, so the bias of
+repeated rounding vanishes (the compression is contractive, not a
+different optimizer; tested in tests/test_dist.py and the multi-device
+loss-trajectory equivalence test).
+
+Contract (tests/test_properties.py):
+  |g + r - dequantize(q, scale)| <= scale / 2   elementwise
+  new_residual == (g + r) - dequantize(q, scale)  exactly (fp32)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_LEVELS = 127.0  # symmetric int8 grid, -127..127 (no -128 asymmetry)
+
+
+def quantize_ef(g: Array, residual: Array) -> tuple[Array, Array, Array]:
+    """Quantize `g + residual` to int8. Returns (q, scale, new_residual).
+
+    scale is a scalar (per-tensor absmax / 127); new_residual carries the
+    rounding error forward.  All accumulation in fp32.
+    """
+    acc = g.astype(jnp.float32) + residual.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(acc)) / _LEVELS
+    # all-zero tensors: keep the divide well-defined (q comes out 0 anyway)
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(acc / scale), -_LEVELS, _LEVELS).astype(jnp.int8)
+    new_residual = acc - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def dequantize(q: Array, scale: Array) -> Array:
+    """Inverse of `quantize_ef` (up to the rounding the residual carries)."""
+    return q.astype(jnp.float32) * scale

@@ -77,7 +77,8 @@ def lower_cell(arch: str, shape: str, mesh, *, variant: int = 0,
                 cfg, opt_cfg,
                 with_residuals=(variant == step_lib.COMM_PRIORITY
                                 and "pod" in mesh.axis_names),
-                data_size=mesh_sizes.get("data", 1))
+                data_size=mesh_sizes.get("data", 1),
+                pod_size=mesh_sizes.get("pod", 1))
             batch_abs = specs.batch_struct(cfg, cell)
             step = step_lib.make_train_step(
                 cfg, opt_cfg, mesh=mesh, variant=variant)
@@ -145,7 +146,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, variant: int = 0,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-        xla_cost = compiled.cost_analysis() or {}
+        xla_cost = hlo_cost.xla_cost_analysis(compiled)
         mem = compiled.memory_analysis()
         hlo_text = compiled.as_text()
         # scan-aware analysis (XLA's cost_analysis counts while bodies once

@@ -76,6 +76,15 @@ _PERM_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
 _OPERAND_NAME = re.compile(r"%([\w.\-]+)")
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """`Compiled.cost_analysis()` returns a dict on newer jax, a
+    one-element list of dicts on older versions — normalize to the dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
     """Total (elements, bytes) over a possibly-tuple type string."""
     elems, bts = 0, 0

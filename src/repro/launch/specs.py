@@ -87,7 +87,7 @@ def batch_struct(cfg: ModelConfig, cell: ShapeCell) -> dict[str, Any]:
 
 def abstract_train_state(cfg: ModelConfig, opt_cfg: opt_lib.OptimizerConfig,
                          *, with_residuals: bool = False,
-                         data_size: int = 1):
+                         data_size: int = 1, pod_size: int = 1):
     """(abstract TrainState, spec tree) — nothing allocated (eval_shape).
 
     The spec tree holds PartitionSpecs (plain data); it is captured from
@@ -98,7 +98,8 @@ def abstract_train_state(cfg: ModelConfig, opt_cfg: opt_lib.OptimizerConfig,
     def init():
         state, specs = step_lib.init_train_state(
             jax.random.PRNGKey(0), cfg, opt_cfg,
-            with_residuals=with_residuals, data_size=data_size)
+            with_residuals=with_residuals, data_size=data_size,
+            pod_size=pod_size)
         holder["specs"] = specs
         return state
 

@@ -4,9 +4,10 @@ switches between (the paper's pre-defined router configurations).
   variant 0 'balanced'      — plain pjit step; XLA's static schedule shares
                               the fabric (paper: equal VC split, RR arbiter).
   variant 1 'comm-priority' — the bandwidth class is boosted:
-      * multi-pod mesh: shard_map manual over (pod, data); grad sync =
-        bf16 psum over `data` (ICI) + int8+EF all_gather over `pod` (DCI)
-        — 4x fewer cross-pod wire bytes (dist/compress.py);
+      * multi-pod mesh: GSPMD steered by sharding constraints (see the
+        variant-1a comment block); grad sync = f32 reduce-scatter over
+        `data` (ICI) + int8+EF all_gather over `pod` (DCI) + bf16 rebuild
+        — 2x fewer cross-pod wire bytes (dist/compress.py);
       * single-pod mesh: 2-way microbatched gradient accumulation — halves
         activation HBM pressure (the z1 'dramfull' signal) at unchanged
         math; the grad collective fires once per step either way.
@@ -52,13 +53,15 @@ def make_loss_fn(cfg: ModelConfig, *, use_kernel: bool = False) -> Callable:
 
 def init_train_state(
     key, cfg: ModelConfig, opt_cfg: opt_lib.OptimizerConfig,
-    *, with_residuals: bool = False, data_size: int = 1,
+    *, with_residuals: bool = False, data_size: int = 1, pod_size: int = 1,
 ) -> tuple[TrainState, Any]:
     """Returns (state, spec-tree matching state).
 
-    with_residuals allocates the flat error-feedback bucket for the
-    comm-priority multipod variant: a (D, N/D) f32 array sharded over the
-    `data` axis (each chip keeps the residual of ITS gradient shard).
+    with_residuals allocates the error-feedback buckets for the
+    comm-priority multipod variant: a (pod, ...shape) f32 array sharded
+    over ("pod", "grad_shard"->data) so each chip keeps the residual of
+    exactly the gradient shard IT quantizes.  pod_size=1 still works on a
+    multi-pod mesh (pod 0's residual is broadcast — degenerate EF).
     """
     if cfg.is_encoder_decoder:
         params, pspecs = encdec.make_encdec(key, cfg)
@@ -68,15 +71,16 @@ def init_train_state(
     if with_residuals:
         def res_leaf(p):
             dim = scatter_dim_for(p.shape, data_size)
-            return (jnp.zeros(p.shape, jnp.float32) if dim is not None
-                    else jnp.zeros((), jnp.float32))
+            return (jnp.zeros((pod_size,) + p.shape, jnp.float32)
+                    if dim is not None else jnp.zeros((), jnp.float32))
 
         def res_spec(p):
             dim = scatter_dim_for(p.shape, data_size)
             if dim is None:
                 return P()
-            ent = [None] * len(p.shape)
-            ent[dim] = "grad_shard"
+            ent = [None] * (len(p.shape) + 1)
+            ent[0] = "pod"
+            ent[dim + 1] = "grad_shard"
             return P(*ent)
 
         residuals = jax.tree.map(res_leaf, params)
@@ -126,17 +130,28 @@ def _balanced_step(loss_fn, opt_cfg):
 # psum(data) then int8 all_gather(pod) of the FULL gradient — every chip
 # carried the same 9.4 GB int8 payload across the DCI, 16x redundant, and
 # measured WORSE than XLA's baseline hierarchical reduction (which crosses
-# pods with only its 1/16 shard).  The fix below reduce-scatters a flat
-# gradient bucket over `data` first, compresses ONLY the per-chip shard for
-# the pod hop, then all-gathers intra-pod:
+# pods with only its 1/16 shard).  The fix reduce-scatters over `data`
+# first, compresses ONLY the per-chip shard for the pod hop, then
+# all-gathers intra-pod:
 #
-#   flat bucket --psum_scatter(data, f32)--> shard (N/D per chip)
+#   per-slice grads --reduce-scatter(data, f32)--> shard (N/D per chip)
 #     --int8+EF all_gather(pod), wire = N/D bytes--> pod-summed shard
 #     --all_gather(data, bf16, ICI)--> full reduced gradient
 #
 # Cross-pod wire: N/D int8 bytes/chip vs N/D bf16 bytes/chip baseline => 2x
-# DCI cut, now with NO redundancy.  EF residuals live on the shard, stored
-# as a (D, N/D) array sharded over `data` ("grad_shard" logical axis).
+# DCI cut, with NO redundancy.  EF residuals are per-chip: a
+# (pod, ...shape) array sharded over ("pod", "grad_shard") so every chip
+# keeps the rounding error of exactly the shard IT quantized.
+#
+# Mechanically this is pure GSPMD steered by sharding constraints — NOT a
+# shard_map: on this toolchain the SPMD partitioner only supports psum-form
+# collectives inside partial-manual (auto-axes) regions, and the model's
+# tensor parallelism must stay under compiler control.  Instead the batch
+# is split into K = pod*data slices on a leading array axis (vmap'd grads,
+# zero cross-slice comm), and the hierarchical reduction is written as
+# array ops whose forced output shardings make XLA emit exactly the
+# reduce-scatter / s8 all-gather / bf16 all-gather sequence above
+# (asserted on the compiled HLO in tests/test_multidevice.py).
 
 def scatter_dim_for(shape, d_size: int) -> Optional[int]:
     """Per-tensor RS dim in NATIVE layout (iteration 2's flat bucket
@@ -150,83 +165,83 @@ def scatter_dim_for(shape, d_size: int) -> Optional[int]:
 
 
 def _comm_priority_multipod_step(loss_fn, opt_cfg, mesh: Mesh):
-    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    d_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    d_size = mesh_sizes.get("data", 1)
+    pod_size = mesh_sizes.get("pod", 1)
+    n_slices = pod_size * d_size
 
-    def _scatter_dim(shape) -> Optional[int]:
-        return scatter_dim_for(shape, d_size)
+    def _wsc(x, *entries):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*entries)))
 
     def step(state: TrainState, batch: dict):
-        def local(state: TrainState, batch: dict):
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(state.params, batch)
-            n_pods = (jax.lax.axis_size("pod")
-                      if "pod" in data_axes else 1)
+        # per-slice gradients: one batch slice per (pod, data) coordinate on
+        # a leading array axis — the backward pass has zero cross-slice comm
+        mbs = jax.tree.map(
+            lambda v: _wsc(
+                v.reshape((n_slices, v.shape[0] // n_slices) + v.shape[1:]),
+                ("pod", "data")),
+            batch)
+        (_, metrics_k), grads_k = jax.vmap(
+            jax.value_and_grad(loss_fn, has_aux=True),
+            in_axes=(None, 0))(state.params, mbs)
 
-            def sync(g, r):
-                dim = _scatter_dim(g.shape)
-                if dim is None or "pod" not in data_axes:
-                    # small tensors (norms/biases): plain mean — negligible
-                    out = (jax.lax.psum(g.astype(jnp.float32), data_axes)
-                           / (d_size * n_pods)).astype(g.dtype)
-                    return out, r
-                # stage 1: reduce-scatter over data in native layout
-                gs = jax.lax.psum_scatter(
-                    g.astype(jnp.float32), "data",
-                    scatter_dimension=dim, tiled=True)
-                # stage 2: int8+EF over the pod axis — the DCI hop carries
-                # 1 byte/el of a 1/D shard
-                q, scale, r = compress.quantize_ef(gs, r)
-                qs = jax.lax.all_gather(q, "pod")
-                ss = jax.lax.all_gather(scale, "pod")
-                gs = jnp.sum(
-                    qs.astype(jnp.float32)
-                    * ss.reshape((n_pods,) + (1,) * gs.ndim), axis=0)
-                gs = gs / (d_size * n_pods)
-                # stage 3: rebuild intra-pod (bf16 ICI)
-                full = jax.lax.all_gather(
-                    gs.astype(jnp.bfloat16), "data", axis=dim, tiled=True)
-                return full.astype(g.dtype), r
+        def sync(g, r):
+            # g: (K, *shape) per-slice grads; r: (R, *shape) EF residuals
+            # with R == pod_size (exact per-chip EF) or R == 1 (degenerate)
+            shape = g.shape[1:]
+            dim = scatter_dim_for(shape, d_size)
+            if dim is None:
+                # small tensors (norms/biases): plain f32 mean — negligible
+                out = jnp.mean(g.astype(jnp.float32), axis=0)
+                return out.astype(g.dtype), r
+            # stage 1: within-pod sum, scattered over `data` in native
+            # layout (forced output sharding => reduce-scatter on the ICI)
+            ent = [None] * (1 + len(shape))
+            ent[0], ent[1 + dim] = "pod", "data"
+            gp = jnp.sum(
+                g.astype(jnp.float32).reshape(
+                    (pod_size, d_size) + shape), axis=1)
+            gp = _wsc(gp, *ent)
+            # stage 2: int8+EF per pod shard; replicating q over `pod`
+            # forces the s8 all-gather — the DCI hop carries 1 byte/el of a
+            # 1/D shard
+            # per-pod residuals feed back whole; a shared (R==1) residual is
+            # split so the total error added across pods stays r
+            rfeed = (r if r.ndim and r.shape[0] == pod_size
+                     else r / pod_size)
+            q, scale, err = jax.vmap(compress.quantize_ef)(
+                gp, jnp.broadcast_to(rfeed, gp.shape))
+            # double-pin: produce q pod-sharded, then demand it replicated —
+            # the reshard between the two constraints IS the s8 all-gather
+            # (one pin only, and the partitioner hoists the reshard to the
+            # f32 input instead)
+            q = _wsc(_wsc(q, *ent), None, *ent[1:])
+            scale = _wsc(_wsc(scale, "pod"), None)
+            deq = (q.astype(jnp.float32)
+                   * scale.reshape((pod_size,) + (1,) * len(shape)))
+            gs = jnp.sum(deq, axis=0) / n_slices
+            # per-chip residuals when R == pod_size; pod 0's otherwise
+            # (scalar placeholders — with_residuals=False — stay zeros)
+            if r.ndim:
+                r_ent = list(ent)
+                if r.shape[0] != pod_size:
+                    r_ent[0] = None     # degenerate: replicate over pod
+                r = _wsc(err[: r.shape[0]], *r_ent)
+            # stage 3: rebuild intra-pod — the `data` all-gather XLA
+            # inserts for the optimizer runs in bf16 on the ICI
+            return gs.astype(jnp.bfloat16).astype(g.dtype), r
 
-            flat_g, tdef = jax.tree.flatten(grads)
-            flat_r = jax.tree.leaves(state.residuals)
-            synced = [sync(g, r) for g, r in zip(flat_g, flat_r)]
-            grads = jax.tree.unflatten(tdef, [s[0] for s in synced])
-            residuals = jax.tree.unflatten(tdef, [s[1] for s in synced])
+        flat_g, tdef = jax.tree.flatten(grads_k)
+        flat_r = jax.tree.leaves(state.residuals)
+        synced = [sync(g, r) for g, r in zip(flat_g, flat_r)]
+        grads = jax.tree.unflatten(tdef, [s[0] for s in synced])
+        residuals = jax.tree.unflatten(tdef, [s[1] for s in synced])
 
-            params, opt_state, opt_m = opt_lib.update(
-                opt_cfg, state.opt, grads, state.params)
-            metrics_all = {**metrics, **opt_m}
-            metrics_all = jax.tree.map(
-                lambda m: jax.lax.pmean(m, data_axes), metrics_all)
-            return TrainState(params, opt_state, residuals), metrics_all
-
-        bspecs = jax.tree.map(
-            lambda v: P(data_axes, *([None] * (v.ndim - 1))), batch)
-        # P() prefixes: params/opt/metrics replicated over the manual data
-        # axes (identical post-reduction); EF residuals are per-shard state
-        # sharded over `data`.
-        # check_vma=False: the int8 path reduces via all_gather + local sum,
-        # whose result is value-invariant over `pod` by construction — the
-        # varying-manual-axes checker cannot infer that (it would demand a
-        # psum, which would wire f32 and defeat the compression).
-        def res_spec(r):
-            dim = _scatter_dim(r.shape) if r.ndim else None
-            if r.ndim == 0 or dim is None:
-                return P()
-            ent = [None] * r.ndim
-            ent[dim] = "data"
-            return P(*ent)
-
-        res_specs = jax.tree.map(res_spec, state.residuals)
-        state_spec = TrainState(params=P(), opt=P(), residuals=res_specs)
-        return jax.shard_map(
-            local, mesh=mesh,
-            in_specs=(state_spec, bspecs),
-            out_specs=(state_spec, P()),
-            axis_names=set(data_axes),
-            check_vma=False,
-        )(state, batch)
+        params, opt_state, opt_m = opt_lib.update(
+            opt_cfg, state.opt, grads, state.params)
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_k)
+        return TrainState(params, opt_state, residuals), {**metrics, **opt_m}
 
     return step
 

@@ -4,10 +4,6 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-pytest.importorskip(
-    "repro.dist", reason="distribution subsystem not present in this build"
-)
-
 import repro.configs as configs
 from repro.models import encdec, lm
 from repro.train import optimizer as opt_lib

@@ -8,10 +8,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "repro.dist", reason="distribution subsystem not present in this build"
-)
-
 from repro.ckpt import elastic, io as ckpt_io
 
 

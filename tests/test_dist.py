@@ -6,10 +6,6 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-pytest.importorskip(
-    "repro.dist", reason="distribution subsystem not present in this build"
-)
-
 from repro.dist import compress, sharding
 
 
@@ -130,3 +126,27 @@ def test_split_stages():
     params = {"w": jnp.arange(24).reshape(6, 2, 2)}
     out = pipeline.split_stages(params, 3)
     assert out["w"].shape == (3, 2, 2, 2)
+
+
+def test_fleet_kf_matches_single_filter():
+    """FleetKF on n=1 == the paper-form NoC predictor (core.kalman),
+    step-for-step — the two KF implementations cannot drift."""
+    from repro.core import kalman
+    from repro.dist.kf_scheduler import FleetKF, SchedulerConfig
+
+    q, r = 3e-3, 2e-1
+    fleet = FleetKF(1, SchedulerConfig(kf_q=q, kf_r=r))
+    params = kalman.paper_params(q=q, r=r)
+    state = kalman.init_state(1)
+
+    zs = np.random.default_rng(7).normal(0, 0.7, (25, 3)).astype(np.float32)
+    for t in range(25):
+        z = jnp.asarray(zs[t])
+        sig_fleet = fleet.epoch(z[None, :])
+        state, _, _ = kalman.step(params, state, z)
+        np.testing.assert_allclose(np.asarray(fleet.x),
+                                   np.asarray(state.x), atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(fleet.p),
+                                   np.asarray(state.p[0]), atol=1e-6,
+                                   rtol=1e-4)
+        assert int(sig_fleet[0]) == int(kalman.binarize(state.x[0]))

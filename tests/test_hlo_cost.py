@@ -13,11 +13,7 @@ def _compile(f, *args):
     return jax.jit(f).lower(*args).compile()
 
 
-def _cost(compiled) -> dict:
-    """`Compiled.cost_analysis()` returns a dict on newer jax, a one-element
-    list of dicts on older versions — normalize to the dict."""
-    ca = compiled.cost_analysis()
-    return ca[0] if isinstance(ca, (list, tuple)) else ca
+_cost = hlo_cost.xla_cost_analysis
 
 
 def test_matches_xla_on_straightline():

@@ -90,7 +90,6 @@ def test_kf_bank_matches_paper_form(B, M, a, q):
 
 def test_fused_mamba_paths_match_ref_scan():
     """The fused chunked scans (production path) == naive recurrence."""
-    pytest.importorskip("repro.dist", reason="model stack not in this build")
     from repro.models import mamba
     from repro.models.config import ModelConfig
 
@@ -108,7 +107,6 @@ def test_fused_mamba_paths_match_ref_scan():
 
 def test_mamba_decode_matches_full_sequence():
     """Step-by-step decode == full-sequence scan (falcon-mamba family)."""
-    pytest.importorskip("repro.dist", reason="model stack not in this build")
     from repro.models import mamba
     from repro.models.config import ModelConfig
 
@@ -135,7 +133,6 @@ def test_mamba_decode_matches_full_sequence():
 def test_fused_mamba_kernel_v2(B, L, D, S, chunk, bd):
     """v2 kernel (decay/input built in VMEM, C-projection fused) == the
     model-level fused scan (itself validated against the naive recurrence)."""
-    pytest.importorskip("repro.dist", reason="model stack not in this build")
     from repro.kernels.mamba_scan import fused
     from repro.models import mamba
 

@@ -6,12 +6,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
-pytest.importorskip(
-    "repro.dist", reason="distribution subsystem not present in this build"
-)
-
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -66,7 +60,7 @@ def test_comm_priority_multipod_compiles_with_int8_wire():
         opt_cfg = specs.default_opt_cfg(cfg)
         with sharding.activate(mesh):
             state_abs, st_specs = specs.abstract_train_state(
-                cfg, opt_cfg, with_residuals=True, data_size=2)
+                cfg, opt_cfg, with_residuals=True, data_size=2, pod_size=2)
             batch = {
                 "tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
                 "labels": jax.ShapeDtypeStruct((8, 16), jnp.int32),
@@ -144,7 +138,7 @@ def test_comm_priority_variant_trains_equivalently():
             with sharding.activate(mesh):
                 state, st_specs = step_lib.init_train_state(
                     jax.random.PRNGKey(0), cfg, opt_cfg,
-                    with_residuals=(variant == 1), data_size=2)
+                    with_residuals=(variant == 1), data_size=2, pod_size=2)
                 step = step_lib.make_train_step(
                     cfg, opt_cfg, mesh=mesh, variant=variant)
                 jitted = step_lib.jit_step(step, mesh, state, st_specs,

@@ -61,9 +61,7 @@ def test_policy_hysteresis_invariants(signals, warmup, hold):
 )
 def test_chunked_scan_equals_naive(b, L, d, s, chunk, seed):
     """Chunked associative scan == sequential recurrence for any shape."""
-    mamba = pytest.importorskip(
-        "repro.models.mamba", reason="model stack not in this build"
-    )
+    from repro.models import mamba
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)
     a = jax.random.uniform(ks[0], (b, L, d, s), jnp.float32, 0.3, 0.999)
     bb = jax.random.normal(ks[1], (b, L, d, s))
@@ -80,9 +78,7 @@ def test_chunked_scan_equals_naive(b, L, d, s, chunk, seed):
 @given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-6, 1e3))
 def test_quantize_ef_error_bound(seed, scale):
     """|g - deq(q)| <= scale/2 elementwise and residual == error."""
-    compress = pytest.importorskip(
-        "repro.dist.compress", reason="distribution subsystem not in this build"
-    )
+    from repro.dist import compress
     g = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * scale
     q, s, r = compress.quantize_ef(g, jnp.zeros((128,)))
     deq = compress.dequantize(q, s)

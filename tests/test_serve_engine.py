@@ -5,10 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "repro.dist", reason="distribution subsystem not present in this build"
-)
-
 import repro.configs as configs
 from repro.models import lm
 from repro.serve import batching, cache as cache_lib

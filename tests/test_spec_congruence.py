@@ -4,10 +4,6 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-pytest.importorskip(
-    "repro.dist", reason="distribution subsystem not present in this build"
-)
-
 import repro.configs as configs
 from repro.launch import specs as launch_specs
 from repro.train import optimizer as opt_lib
