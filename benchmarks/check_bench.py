@@ -1,0 +1,98 @@
+"""Perf-regression gate over the committed BENCH_noc.json trajectory.
+
+Re-runs the sweep smoke grid (`bench_sweep.run(smoke=True)`) and fails if
+the engine regressed versus the last committed `noc_sweep_serial_vs_batched`
+row on either guarded axis:
+
+  * trace count — the batched arm must not trace the simulator more often
+    than the committed row did (1 since the S-padding refactor; the whole
+    point of the engine is that the sweep is ONE compiled program);
+  * end-to-end speedup — the smoke grid's serial-vs-batched speedup must
+    clear an absolute floor AND a fraction of the committed row's speedup.
+    The committed row is usually the full grid, whose per-point compile
+    amortization is stronger than the smoke grid's, so the fraction is
+    deliberately loose — this is a cliff detector (e.g. the jit-cache
+    identity gotcha quietly rebatching the serial arm, or a retrace per
+    point sneaking back in), not a 5%-noise tripwire.
+
+`speedup_steady` is intentionally NOT gated: at smoke scale the steady
+pass is milliseconds of scan work and swings 0.4-1.1x run to run, and the
+S/V-padded program's ~2x steady cost on 2-subnet-only grids is a known,
+documented trade (DESIGN.md §10, bench_sweep.run docstring) — gate it and
+the gate flakes; watch the full-grid trajectory rows instead.
+
+    PYTHONPATH=src python -m benchmarks.check_bench
+
+Exit code 0 = within tolerance, 1 = regression (message says which gate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks import bench_sweep
+
+DEFAULT_MIN_SPEEDUP = 1.5  # absolute floor for the smoke grid
+DEFAULT_FRAC = 0.25  # of the last committed row's speedup
+
+
+def last_committed_row(path: str, bench: str = "noc_sweep_serial_vs_batched"):
+    with open(path) as f:
+        records = json.load(f)
+    rows = [r for r in records if r.get("bench") == bench]
+    if not rows:
+        msg = f"no committed {bench!r} row in {path}"
+        raise SystemExit(msg + "; run benchmarks.bench_sweep (non-smoke) first")
+    return rows[-1]
+
+
+def check(rec: dict, baseline: dict, min_speedup: float, frac: float) -> list:
+    """Return the list of violated gates (empty = pass)."""
+    failures = []
+    allowed = baseline.get("batched_traces", 1)
+    got = rec["batched_traces"]
+    if got > allowed:
+        failures.append(
+            f"trace regression: batched arm traced simulate {got}x "
+            f"(committed row: {allowed}x)"
+        )
+    floor = max(min_speedup, frac * baseline["speedup_end_to_end"])
+    speedup = rec["speedup_end_to_end"]
+    if speedup < floor:
+        failures.append(
+            f"speedup regression: end-to-end {speedup}x < floor {floor:.2f}x "
+            f"(committed row: {baseline['speedup_end_to_end']}x, "
+            f"frac {frac}, abs min {min_speedup})"
+        )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min-speedup", type=float, default=DEFAULT_MIN_SPEEDUP)
+    ap.add_argument("--frac", type=float, default=DEFAULT_FRAC)
+    ap.add_argument("--bench-json", default=bench_sweep.BENCH_PATH)
+    args = ap.parse_args(argv)
+
+    baseline = last_committed_row(args.bench_json)
+    rec = bench_sweep.run(smoke=True)
+    print(json.dumps(rec, indent=2))
+
+    failures = check(rec, baseline, args.min_speedup, args.frac)
+    if failures:
+        for failure in failures:
+            print(f"BENCH REGRESSION: {failure}", file=sys.stderr)
+        return 1
+    print(
+        f"bench gate OK: {rec['batched_traces']} trace(s), "
+        f"{rec['speedup_end_to_end']}x end-to-end (committed: "
+        f"{baseline['speedup_end_to_end']}x on "
+        f"{baseline['grid']['n_points']} points)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

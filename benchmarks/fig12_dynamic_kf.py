@@ -5,24 +5,30 @@ Claim: in the epochs where 2-subnet-fair dips (GPU burst under-provisioned),
 the KF run holds IPC up, and the dips align with KF signal = 1.
 
 Both arms and every seed replica run in ONE `simulate_batch` dispatch (fair
-and kf differ only in traced policy tensors); per-epoch IPC traces are
-averaged across seeds, signal/config traces come from the first seed.
+and kf differ only in traced policy tensors) on the standard `SWEEP_TILE`
+tiling, so the dispatch reuses the same executable as the Fig. 2/3 and
+9/10/11 sweeps; per-epoch IPC traces are averaged across seeds,
+signal/config traces come from the first seed.  `devices=N` shards the
+batch across devices instead.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.noc.sim import NoCConfig, simulate_batch
+from repro.core.noc.sim import SWEEP_TILE, NoCConfig, simulate_batch
 from repro.core.noc.traffic import PROFILES
 
 SEEDS = (0, 1, 2)
 
 
 def run(workload: str = "STO", n_epochs: int = 120,
-        seeds: tuple[int, ...] = SEEDS):
-    cfgs = [NoCConfig(mode=m, n_epochs=n_epochs, seed=s)
+        seeds: tuple[int, ...] = SEEDS, devices: int | None = None,
+        **overrides):
+    cfgs = [NoCConfig(mode=m, n_epochs=n_epochs, seed=s, **overrides)
             for m in ("fair", "kf") for s in seeds]
-    res = simulate_batch(cfgs, PROFILES[workload])
+    batch_tile = None if devices is not None else SWEEP_TILE
+    res = simulate_batch(cfgs, PROFILES[workload], batch_tile=batch_tile,
+                         devices=devices)
     n = len(seeds)
     fair_ipc = np.asarray(res.gpu_ipc[:n])
     kf_ipc = np.asarray(res.gpu_ipc[n:])
@@ -37,8 +43,14 @@ def run(workload: str = "STO", n_epochs: int = 120,
     }
 
 
-def main():
-    tr = run()
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the two-arm batch across N devices")
+    args = ap.parse_args(argv)
+    tr = run(devices=args.devices)
     print("epoch,fair_gpu_ipc,kf_gpu_ipc,kf_signal,applied_config")
     for i in range(len(tr["fair_ipc"])):
         print(f"{i},{tr['fair_ipc'][i]:.4f},{tr['kf_ipc'][i]:.4f},"

@@ -8,6 +8,8 @@ CPU IPC barely moves (and can even dip when CPU packets pile into the MCs).
 The whole grid (workloads x ratios x seeds) runs through `sim.sweep` as one
 batched dispatch sharing a single compiled program; multi-seed replicas are
 therefore nearly free, and every cell reports mean +- std across seeds.
+`devices=N` shards the grid's batch axis data-parallel across devices
+(the same dispatch `sim.sweep_sharded` uses).
 """
 from __future__ import annotations
 
@@ -19,12 +21,12 @@ SEEDS = (0, 1, 2)
 
 
 def run(n_epochs: int = 60, seeds: tuple[int, ...] = SEEDS,
-        **overrides) -> dict:
+        devices: int | None = None, **overrides) -> dict:
     specs = [
         SweepSpec("static", wl, static_gpu_vcs=g, seed=s)
         for wl in WORKLOADS for g in RATIOS for s in seeds
     ]
-    rows = sweep(specs, n_epochs=n_epochs, **overrides)
+    rows = sweep(specs, n_epochs=n_epochs, devices=devices, **overrides)
     by_point = {
         (sp.workload, sp.static_gpu_vcs): [] for sp in specs
     }
@@ -39,8 +41,14 @@ def run(n_epochs: int = 60, seeds: tuple[int, ...] = SEEDS,
     }
 
 
-def main():
-    results = run()
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the sweep batch axis across N devices")
+    args = ap.parse_args(argv)
+    results = run(devices=args.devices)
     print("workload,ratio,gpu_ipc,gpu_ipc_std,cpu_ipc,cpu_ipc_std,avg_latency")
     for wl, row in results.items():
         for ratio, s in row.items():

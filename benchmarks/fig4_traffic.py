@@ -2,17 +2,38 @@
 injection is stable; GPU stalls track injection bursts.
 
 Emits the per-epoch traces (gpu injection rate, stall counters, IPC proxy)
-that the KF consumes, for the PATH workload.
+that the KF consumes, for the PATH workload.  With `seeds` given, the seed
+replicas run as one lockstep batch (optionally device-sharded via
+`devices=N`) and the returned traces are seed-0's, matching the paper's
+single-run figure while exercising the shared sweep engine.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.noc.sim import run_workload
+from repro.core.noc.sim import (
+    SWEEP_TILE,
+    NoCConfig,
+    run_workload,
+    simulate_batch,
+)
+from repro.core.noc.traffic import PROFILES
 
 
-def run(workload: str = "PATH", n_epochs: int = 120):
-    res = run_workload("baseline", workload, n_epochs=n_epochs)
+def run(workload: str = "PATH", n_epochs: int = 120,
+        seeds: tuple[int, ...] | None = None, devices: int | None = None):
+    if seeds is not None or devices is not None:
+        import jax
+
+        seeds = seeds or (0,)
+        cfgs = [NoCConfig(mode="baseline", n_epochs=n_epochs, seed=s)
+                for s in seeds]
+        batch_tile = None if devices is not None else SWEEP_TILE
+        batch = simulate_batch(cfgs, PROFILES[workload],
+                               batch_tile=batch_tile, devices=devices)
+        res = jax.tree.map(lambda x: x[0], batch)
+    else:
+        res = run_workload("baseline", workload, n_epochs=n_epochs)
     c = res.counters
     return {
         "gpu_inj_rate": np.asarray(res.gpu_inj_rate),
@@ -23,8 +44,14 @@ def run(workload: str = "PATH", n_epochs: int = 120):
     }
 
 
-def main():
-    tr = run()
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=None,
+                    help="run the trace through the device-sharded batch path")
+    args = ap.parse_args(argv)
+    tr = run(devices=args.devices)
     print("epoch,gpu_inj_rate,gpu_ipc,gpu_stall_icnt,gpu_stall_dram,cpu_push")
     for i in range(len(tr["gpu_ipc"])):
         print(f"{i},{tr['gpu_inj_rate'][i]:.4f},{tr['gpu_ipc'][i]:.4f},"

@@ -6,10 +6,11 @@ Claims validated:
   * 4-subnet hurts GPU IPC (can't borrow idle bandwidth);
   * fair ~ baseline; KF >= fair on GPU IPC; CPU IPC unaffected (±5%).
 
-All (workload, mode, seed) rows go through `sim.sweep`: the three 2-subnet
-modes share one compiled program (the mode is a traced policy tensor) and
-4-subnet compiles the only other one; rows execute as batched lockstep
-dispatches, and each cell reports mean +- std across seeds.
+All (workload, mode, seed) rows go through `sim.sweep`: since the
+S-padding refactor ALL four modes — 4-subnet included — share the one
+compiled program (mode and subnet structure are traced policy tensors);
+rows execute as batched lockstep dispatches, and each cell reports mean
++- std across seeds.  `devices=N` shards the batch axis across devices.
 """
 from __future__ import annotations
 
@@ -21,12 +22,12 @@ SEEDS = (0, 1, 2)
 
 
 def run(n_epochs: int = 60, seeds: tuple[int, ...] = SEEDS,
-        **overrides) -> dict:
+        devices: int | None = None, **overrides) -> dict:
     specs = [
         SweepSpec(m, wl, seed=s)
         for wl in WORKLOADS for m in MODES for s in seeds
     ]
-    rows = sweep(specs, n_epochs=n_epochs, **overrides)
+    rows = sweep(specs, n_epochs=n_epochs, devices=devices, **overrides)
     by_point: dict[tuple[str, str], list] = {}
     for sp, row in zip(specs, rows):
         by_point.setdefault((sp.workload, sp.mode), []).append(row)
@@ -36,8 +37,14 @@ def run(n_epochs: int = 60, seeds: tuple[int, ...] = SEEDS,
     }
 
 
-def main():
-    results = run()
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the sweep batch axis across N devices")
+    args = ap.parse_args(argv)
+    results = run(devices=args.devices)
     print("workload,mode,gpu_ipc,gpu_ipc_std,cpu_ipc,avg_latency,kf_on_frac")
     for wl, row in results.items():
         for m, s in row.items():

@@ -99,6 +99,14 @@ class ModePolicy(NamedTuple):
     ``static``/``kf`` share one compiled 2-subnet trace and can be stacked
     along a batch axis for ``sim.simulate_batch`` (DESIGN.md §4).
 
+    Since the S-padding refactor (DESIGN.md §10) the *subnet structure* is
+    traced too: ``sub_enabled``/``sub_is_req`` describe which rows of the
+    padded subnet axis are live and which direction they carry, and
+    ``four_subnet`` selects the class-segregated routing of Fig. 9.  With
+    those in data, 2-subnet and 4-subnet configurations share ONE compiled
+    program (padded subnets are zero-width: never injected into, links never
+    active).
+
     Leaves may carry a leading batch dimension when stacked.
     """
 
@@ -108,9 +116,19 @@ class ModePolicy(NamedTuple):
     cpu_mask1: Array   # (V,) bool
     sa_enable: Array   # ()  bool — enable the Fig. 8 SA preference pattern
     kf_enable: Array   # ()  bool — let the KF hysteresis machine drive config
+    four_subnet: Array  # () bool — class-segregated subnet routing (Fig. 9)
+    sub_enabled: Array  # (S,) bool — live rows of the padded subnet axis
+    sub_is_req: Array   # (S,) bool — request-direction subnets (rest: reply)
 
 
-def mode_policy(mode: str, n_vcs: int = 4, static_gpu_vcs: int = 2) -> ModePolicy:
+def mode_policy(
+    mode: str,
+    n_vcs: int = 4,
+    static_gpu_vcs: int = 2,
+    *,
+    n_subnets: int | None = None,
+    active_vcs: int | None = None,
+) -> ModePolicy:
     """Build the traced policy tensors for one of the paper's modes.
 
     baseline — VCs fully shared between classes, round-robin SA, no KF.
@@ -118,29 +136,64 @@ def mode_policy(mode: str, n_vcs: int = 4, static_gpu_vcs: int = 2) -> ModePolic
     static   — fixed [static_gpu_vcs : V - static_gpu_vcs] partition (Fig. 2/3).
     kf       — equal partition when config=0, boosted partition + SA pattern
                when config=1, KF drives config.
-    4subnet  — physical segregation: within a subnet every VC belongs to its
-               class, so both masks are full (the subnet index segregates).
+    4subnet  — physical segregation: within a subnet every VC its class may
+               use is allowed (the subnet index segregates classes).
+
+    ``n_subnets`` is the (possibly padded) length of the subnet axis and
+    ``active_vcs`` the number of usable VCs out of ``n_vcs`` — VC indices
+    ``>= active_vcs`` are masked off for both classes, which is how the
+    4-subnet network (2 VCs/subnet) rides a V-padded shared program.  Both
+    default to the mode's dedicated (unpadded) structure.
     """
-    ones = jnp.ones((n_vcs,), bool)
+    if n_subnets is None:
+        n_subnets = 4 if mode == "4subnet" else 2
+    if active_vcs is None:
+        active_vcs = n_vcs
+    if not 0 < active_vcs <= n_vcs:
+        raise ValueError(f"active_vcs={active_vcs} outside (0, {n_vcs}]")
+    avail = jnp.arange(n_vcs) < active_vcs
     if mode in ("baseline", "4subnet"):
-        g0, c0 = ones, ones
+        g0, c0 = avail, avail
     elif mode == "fair":
-        g0, c0 = vc_partition(jnp.int32(0), n_vcs)
+        g0, c0 = vc_partition(jnp.int32(0), active_vcs)
     elif mode == "static":
-        g0 = jnp.arange(n_vcs) < static_gpu_vcs
-        c0 = ~g0
+        g0 = (jnp.arange(n_vcs) < static_gpu_vcs) & avail
+        c0 = avail & ~g0
     elif mode == "kf":
-        g0, c0 = vc_partition(jnp.int32(0), n_vcs)
+        g0, c0 = vc_partition(jnp.int32(0), active_vcs)
     else:
         raise ValueError(f"unknown mode {mode!r}")
     if mode == "kf":
-        g1, c1 = vc_partition(jnp.int32(1), n_vcs)
+        g1, c1 = vc_partition(jnp.int32(1), active_vcs)
     else:
         g1, c1 = g0, c0  # config never leaves 0 when the KF is disabled
+
+    def pad_v(m: Array) -> Array:  # partition masks are built over active_vcs
+        if m.shape[0] == n_vcs:
+            return m
+        return jnp.concatenate([m, jnp.zeros((n_vcs - m.shape[0],), bool)])
+
+    sub = jnp.arange(n_subnets)
+    if mode == "4subnet":
+        if n_subnets != 4:
+            raise ValueError("4subnet mode needs a 4-row subnet axis, got "
+                             f"{n_subnets}")
+        sub_enabled = jnp.ones((n_subnets,), bool)
+        sub_is_req = sub % 2 == 0          # {CPU,GPU} x {req, reply}
+    else:
+        if n_subnets < 2:
+            raise ValueError(f"2-subnet modes need n_subnets >= 2, got "
+                             f"{n_subnets}")
+        sub_enabled = sub < 2              # rows 2.. are zero-width padding
+        sub_is_req = sub == 0              # subnet 0 req, subnet 1 reply
     is_kf = mode == "kf"
     return ModePolicy(
-        gpu_mask0=g0, cpu_mask0=c0, gpu_mask1=g1, cpu_mask1=c1,
+        gpu_mask0=pad_v(g0), cpu_mask0=pad_v(c0),
+        gpu_mask1=pad_v(g1), cpu_mask1=pad_v(c1),
         sa_enable=jnp.asarray(is_kf), kf_enable=jnp.asarray(is_kf),
+        four_subnet=jnp.asarray(mode == "4subnet"),
+        sub_enabled=sub_enabled,
+        sub_is_req=sub_is_req,
     )
 
 

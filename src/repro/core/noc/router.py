@@ -23,7 +23,6 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.noc.topology import N_PORTS, PORT_L, Topology
 

@@ -21,15 +21,20 @@ Four network configurations (paper §4.2):
 The whole run is one jitted ``lax.scan`` over epochs with an inner scan over
 cycles; 36 routers x 4 VCs x depth 4 keeps per-cycle tensors tiny.
 
-Batched sweep engine (DESIGN.md §4)
------------------------------------
-``mode``, the static VC ratio, the workload rates, and the seed are all
-*traced* data (`allocator.ModePolicy` tensors + `traffic.WorkloadProfile`
-pytrees), so every 2-subnet configuration shares ONE compiled program; only
-the structurally different 4-subnet network compiles a second one.
-``simulate_batch`` vmaps that program over a leading batch axis (configs x
-workloads x seeds evaluated in lockstep, with donated carry buffers), and
-``sweep`` is the grouping driver the paper-figure benchmarks run on.
+Batched sweep engine (DESIGN.md §4, §10)
+----------------------------------------
+``mode``, the static VC ratio, the workload rates, the seed, AND the subnet
+structure are all *traced* data (`allocator.ModePolicy` tensors +
+`traffic.WorkloadProfile` pytrees): every configuration's subnet axis is
+padded to ``S_MAX`` (padded subnets are zero-width — never injected into,
+links never active) and the 4-subnet network's 2 VCs/subnet ride a V-padded
+axis with the upper VCs masked off, so 2-subnet and 4-subnet configurations
+share ONE compiled program.  ``simulate_batch`` vmaps that program over a
+leading batch axis (configs x workloads x seeds evaluated in lockstep, with
+donated carry buffers) and can shard that axis data-parallel across devices
+(``devices=``/``mesh=``, via the `repro.dist.sharding.shard_map` shim);
+``sweep`` / ``sweep_sharded`` are the drivers the paper-figure benchmarks
+run on.
 """
 from __future__ import annotations
 
@@ -67,19 +72,26 @@ Array = jax.Array
 
 BCAP = 64  # per-node source-queue (shader/LSQ) capacity
 
+# Padded subnet-axis length shared by every mode's program (DESIGN.md §10):
+# large enough for the 4-subnet network; 2-subnet modes leave rows 2..3
+# zero-width (never injected into, links never active).
+S_MAX = 4
+
 
 @dataclasses.dataclass(frozen=True)
 class SimStatic:
     """The structural (compile-time) part of a simulation config.
 
     Everything the XLA program *shape* depends on.  Deliberately excludes
-    ``mode`` (except its 2-vs-4-subnet structure), the static VC ratio, and
-    the seed — those are traced, so all 2-subnet configurations share one
-    compiled executable (DESIGN.md §4).
+    ``mode`` — including its subnet structure, which since the S-padding
+    refactor (DESIGN.md §10) is traced `ModePolicy` data over a padded
+    (``n_subnets``, ..., ``n_vcs``) state — plus the static VC ratio and the
+    seed.  With the default padded spec every configuration shares one
+    compiled executable.
     """
 
-    four_subnet: bool
-    n_vcs: int
+    n_subnets: int   # length of the (possibly padded) subnet axis
+    n_vcs: int       # per-subnet VC axis length (possibly padded)
     buf_depth: int
     epoch_len: int
     n_epochs: int
@@ -90,14 +102,6 @@ class SimStatic:
     z_scales: tuple[float, float, float]
     kf_q: float
     kf_r: float
-
-    @property
-    def n_subnets(self) -> int:
-        return 4 if self.four_subnet else 2
-
-    @property
-    def vcs_per_subnet(self) -> int:
-        return self.n_vcs // 2 if self.four_subnet else self.n_vcs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,10 +135,17 @@ class NoCConfig:
     def vcs_per_subnet(self) -> int:
         return self.n_vcs // 2 if self.mode == "4subnet" else self.n_vcs
 
-    def static_spec(self) -> SimStatic:
+    def static_spec(self, padded: bool = True) -> SimStatic:
+        """Structural spec — padded (default) or the mode's dedicated shape.
+
+        ``padded=True`` pads the subnet axis to ``S_MAX`` and keeps the full
+        VC axis, so EVERY mode returns the same spec and shares one compiled
+        program.  ``padded=False`` reproduces the pre-§10 dedicated traces
+        (2-subnet xV, or 4-subnet x V/2) — kept for the equivalence tests.
+        """
         return SimStatic(
-            four_subnet=self.mode == "4subnet",
-            n_vcs=self.n_vcs,
+            n_subnets=S_MAX if padded else self.n_subnets,
+            n_vcs=self.n_vcs if padded else self.vcs_per_subnet,
             buf_depth=self.buf_depth,
             epoch_len=self.epoch_len,
             n_epochs=self.n_epochs,
@@ -147,8 +158,12 @@ class NoCConfig:
             kf_r=self.kf_r,
         )
 
-    def mode_policy(self) -> ModePolicy:
-        return mode_policy(self.mode, self.vcs_per_subnet, self.static_gpu_vcs)
+    def mode_policy(self, padded: bool = True) -> ModePolicy:
+        stc = self.static_spec(padded)
+        return mode_policy(
+            self.mode, stc.n_vcs, self.static_gpu_vcs,
+            n_subnets=stc.n_subnets, active_vcs=self.vcs_per_subnet,
+        )
 
 
 class MCState(NamedTuple):
@@ -210,7 +225,7 @@ def init_sim_state(stc: SimStatic, batch: int | None = None):
     """
     topo = make_topology()
     R = topo.n_routers
-    S, V, B = stc.n_subnets, stc.vcs_per_subnet, stc.buf_depth
+    S, V, B = stc.n_subnets, stc.n_vcs, stc.buf_depth
 
     def z(shape, dtype=jnp.int32):
         if batch is not None:
@@ -270,7 +285,7 @@ def _simulate_impl(
     route_t, nb_t, opp_t, ntype, mc_ids = rt.device_tables(topo)
     R = topo.n_routers
     S = stc.n_subnets
-    V = stc.vcs_per_subnet
+    V = stc.n_vcs
 
     is_mc = ntype == 2
     is_gpu = ntype == 1
@@ -278,15 +293,19 @@ def _simulate_impl(
     node_cls = jnp.where(is_gpu, 1, 0)  # class a node's own traffic belongs to
     ar = jnp.arange(R)
 
-    # subnet routing of a node's traffic (request direction); the reply
-    # subnet additionally depends on the requester's class in 4-subnet mode.
-    if stc.four_subnet:
-        req_sub = 2 * node_cls
-        sub_is_req = np.asarray([True, False, True, False])
-    else:
-        req_sub = jnp.zeros((R,), jnp.int32)
-        sub_is_req = np.asarray([True, False])
-    n_req_subs = int(sub_is_req.sum())
+    # Traced subnet structure (DESIGN.md §10): which rows of the padded
+    # subnet axis are live, which carry requests, and whether routing is
+    # class-segregated.  Padded rows are zero-width: excluded from every
+    # inject want-matrix below and link-inactive in cycle_body, so no packet
+    # can ever enter them.
+    fs = mp.four_subnet                      # () bool
+    sub_enabled = mp.sub_enabled             # (S,) bool
+    sub_is_req = mp.sub_is_req               # (S,) bool
+    sub_is_rep = sub_enabled & ~sub_is_req   # (S,) bool
+    n_req_subs = jnp.sum(sub_is_req.astype(jnp.int32))
+    # request subnet of a node's own traffic; the reply subnet additionally
+    # depends on the requester's class when routing is class-segregated.
+    req_sub = jnp.where(fs, 2 * node_cls, 0)
     sub_ids = jnp.arange(S, dtype=jnp.int32)
 
     subnets0, mc0, outstanding0, backlog0 = state0
@@ -317,11 +336,10 @@ def _simulate_impl(
             mp.sa_enable, sa_priority_pattern(config_idx, cycle), jnp.int32(-1)
         )
 
-        # subnet link activation: full width (2-subnet) or alternating (4-subnet)
-        if stc.four_subnet:
-            active = (cycle % 2) == (jnp.arange(S) % 2)
-        else:
-            active = jnp.ones((S,), bool)
+        # subnet link activation: full width (2-subnet) or alternating-cycle
+        # half width (4-subnet); padded subnet rows are never active.
+        alternating = (cycle % 2) == (jnp.arange(S) % 2)
+        active = sub_enabled & jnp.where(fs, alternating, True)
 
         # MC acceptance applies to ejections on *request* subnets at MC nodes.
         # With multiple request subnets (4-subnet mode) up to S/2 packets can
@@ -332,14 +350,12 @@ def _simulate_impl(
 
         # ---- 1. MC: inject staged replies into the reply subnet(s),
         # one batched scatter over all subnets (reply subnet of requester
-        # class c is 2c+1 in 4-subnet mode, subnet 1 otherwise)
-        if stc.four_subnet:
-            rep_target = 2 * mc.stage_cls + 1
-        else:
-            rep_target = jnp.ones((R,), jnp.int32)
+        # class c is 2c+1 under class-segregated routing, subnet 1 otherwise)
+        rep_target = jnp.where(fs, 2 * mc.stage_cls + 1, 1)
         want_rep = (
             (sub_ids[:, None] == rep_target[None, :])
             & (mc.stage_valid & is_mc)[None, :]
+            & sub_enabled[:, None]
         )
         new_subs, ok_rep = inject_subnets(
             subs, ar, want_rep, mc.stage_dst, ar,
@@ -376,6 +392,8 @@ def _simulate_impl(
         # One scatter for all subnets: a per-subnet exclusive prefix count
         # serializes same-MC arrivals into consecutive ring slots (4-subnet
         # mode can deliver two per cycle; `mc_space` reserved slots above).
+        # (`sub_is_req` masks the reduction to live request rows — padded
+        # subnets cannot eject, but the mask keeps the scatter shape-safe.)
         req_ej = events.eject_valid & sub_is_req[:, None] & is_mc[None, :]  # (S,R)
         arr_i = req_ej.astype(jnp.int32)
         slot_off = jnp.cumsum(arr_i, axis=0) - arr_i
@@ -391,7 +409,8 @@ def _simulate_impl(
             count=mc.count + jnp.sum(arr_i, axis=0),
         )
         # reply-subnet ejections at source nodes -> complete transactions
-        rep_ej = events.eject_valid & (~sub_is_req)[:, None] & (~is_mc)[None, :]
+        # (masked to live reply rows, not just ~sub_is_req, under S-padding)
+        rep_ej = events.eject_valid & sub_is_rep[:, None] & (~is_mc)[None, :]
         rep_done = jnp.any(rep_ej, axis=0)
         outstanding = outstanding - rep_done.astype(jnp.int32)
         rep_cls = jnp.sum(jnp.where(rep_ej, events.eject_cls, 0), axis=0)
@@ -418,7 +437,11 @@ def _simulate_impl(
             mc_ids, jax.random.randint(k_dest, (R,), 0, mc_ids.shape[0])
         )
         births = bl_birth[ar, bl_head]  # packet birth = generation
-        want_inj = (sub_ids[:, None] == req_sub[None, :]) & can_inj[None, :]
+        want_inj = (
+            (sub_ids[:, None] == req_sub[None, :])
+            & can_inj[None, :]
+            & sub_enabled[:, None]
+        )
         new_subs, ok_inj = inject_subnets(
             new_subs, ar, want_inj, dests, ar,
             node_cls, births, cyc_vec, gpu_masks, cpu_masks,
@@ -543,12 +566,19 @@ def _batch_jit():
     return _BATCH_JIT
 
 
-def simulate(cfg: NoCConfig, profile: WorkloadProfile) -> SimResult:
-    """Run one configuration (compiles at most once per `SimStatic`)."""
-    stc = cfg.static_spec()
+def simulate(
+    cfg: NoCConfig, profile: WorkloadProfile, padded: bool = True
+) -> SimResult:
+    """Run one configuration (compiles at most once per `SimStatic`).
+
+    With ``padded=True`` (default) every mode runs the shared S/V-padded
+    program; ``padded=False`` compiles the mode's dedicated trace, kept so
+    the equivalence tests can pin padded == dedicated bit-for-bit.
+    """
+    stc = cfg.static_spec(padded)
     return _SIM_JIT(
         stc,
-        cfg.mode_policy(),
+        cfg.mode_policy(padded),
         profile,
         jnp.int32(cfg.seed),
         init_sim_state(stc),
@@ -559,22 +589,88 @@ def _tree_rows(tree, sl):
     return jax.tree.map(lambda x: x[sl], tree)
 
 
+def _pad_rows(tree, n_pad: int):
+    """Append n_pad copies of row 0 along axis 0 of every leaf (discarded
+    after the dispatch)."""
+    if n_pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.repeat(x[:1], n_pad, axis=0)], axis=0
+        ),
+        tree,
+    )
+
+
+# Sharded dispatch cache: one jitted shard_map program per (SimStatic, Mesh).
+# jit itself handles per-batch-shape retraces under each entry.
+_SHARD_JIT: dict = {}
+
+
+def _sharded_jit(stc: SimStatic, mesh):
+    """Data-parallel batched entry: the vmapped program under shard_map.
+
+    The batch axis is split across the mesh's `sweep` axis; each device runs
+    the SAME per-shard vmapped program with no cross-device communication
+    (psum-free), which keeps it clear of the jax-0.4.37 partial-manual
+    collective SIGABRT (DESIGN.md §10) — all mesh axes are manual here and
+    no collective is ever emitted.
+    """
+    key = (stc, mesh)
+    if key not in _SHARD_JIT:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.dist import sharding as dist_sharding
+
+        batched = jax.vmap(_simulate_impl, in_axes=(None, 0, 0, 0, 0))
+
+        def shard_body(mp, prof, seeds, state0):
+            return batched(stc, mp, prof, seeds, state0)
+
+        spec = P(SWEEP_AXIS)
+        # check_vma off: jax 0.4.37's replication checker mis-types the
+        # epoch-scan carry under shard_map and aborts the trace; with every
+        # mesh axis manual and zero collectives the check has nothing to
+        # verify here anyway.  Carry donation mirrors _batch_jit (state0 is
+        # shard_body arg 3; CPU has no donation support).
+        donate = () if jax.default_backend() == "cpu" else (3,)
+        _SHARD_JIT[key] = jax.jit(
+            dist_sharding.shard_map(
+                shard_body, mesh=mesh,
+                in_specs=(spec, spec, spec, spec), out_specs=spec,
+                axis_names=(SWEEP_AXIS,), check_vma=False,
+            ),
+            donate_argnums=donate,
+        )
+    return _SHARD_JIT[key]
+
+
 def simulate_batch(
     cfgs: Sequence[NoCConfig],
     profiles: WorkloadProfile | Sequence[WorkloadProfile],
     seeds: Sequence[int] | None = None,
     batch_tile: int | None = None,
+    devices: int | None = None,
+    mesh=None,
 ) -> SimResult:
     """Evaluate many configurations in lockstep: one compiled program,
     one device dispatch per tile.
 
     cfgs      — length-B configs; all must share the same `static_spec()`
-                (mode/ratio/seed may differ freely, those are traced).
+                (mode/ratio/seed/subnet-structure are traced).
     profiles  — length-B workload profiles, or one profile for all rows.
     seeds     — optional per-row seeds; defaults to each cfg's own seed.
-    batch_tile— if set, the batch is processed in fixed-size tiles (the last
-                one padded), so EVERY sweep in the process reuses the same
-                (tile-shaped) executable regardless of its batch size.
+    batch_tile— if set, the batch is processed in fixed-size tiles (short
+                batches and the ragged tail padded up), so EVERY sweep in
+                the process reuses the same (tile-shaped) executable
+                regardless of its batch size.
+    devices / mesh —
+                shard the batch axis data-parallel across devices: the flat
+                point list is padded to a multiple of the device count and
+                dispatched once through the shard_map path (`batch_tile` is
+                ignored; per-device row count is the effective tile).
+                `devices=N` builds a mesh over the first N local devices;
+                pass `mesh` to reuse one (must have a `sweep` axis).
 
     Returns a `SimResult` whose leaves carry a leading (B,) axis.
     """
@@ -603,18 +699,30 @@ def simulate_batch(
     mp = jax.tree.map(lambda *xs: jnp.stack(xs), *[c.mode_policy() for c in cfgs])
     prof = stack_profiles(profiles)
 
-    tile = B if batch_tile is None else min(batch_tile, B)
+    if devices is not None or mesh is not None:
+        if mesh is None:
+            from repro.dist import sharding as dist_sharding
+
+            mesh = dist_sharding.sweep_mesh(devices)
+        ndev = int(mesh.devices.size)
+        padded_b = -(-B // ndev) * ndev
+        mp, prof, seeds = (
+            _pad_rows(t, padded_b - B) for t in (mp, prof, seeds)
+        )
+        out = _sharded_jit(stc, mesh)(
+            mp, prof, seeds, init_sim_state(stc, padded_b)
+        )
+        return _tree_rows(out, slice(0, B))
+
+    tile = B if batch_tile is None else batch_tile
     parts = []
     for lo in range(0, B, tile):
         sl = slice(lo, min(lo + tile, B))
         n = sl.stop - sl.start
         mp_t, prof_t, seeds_t = (_tree_rows(t, sl) for t in (mp, prof, seeds))
         if n < tile:  # pad the ragged tail by repeating row 0 (discarded)
-            pad = lambda x: jnp.concatenate(
-                [x, jnp.repeat(x[:1], tile - n, axis=0)], axis=0
-            )
             mp_t, prof_t, seeds_t = (
-                jax.tree.map(pad, t) for t in (mp_t, prof_t, seeds_t)
+                _pad_rows(t, tile - n) for t in (mp_t, prof_t, seeds_t)
             )
         out = _batch_jit()(stc, mp_t, prof_t, seeds_t, init_sim_state(stc, tile))
         parts.append(_tree_rows(out, slice(0, n)))
@@ -633,23 +741,31 @@ class SweepSpec(NamedTuple):
 
 
 # Tile size for sweep batches.  The paper sweeps (4 workloads x 3 ratios,
-# 6 workloads x {3 two-subnet modes, 4subnet}) are all multiples of 6 once
-# multiplied by any seed count, so 6 gives zero padding waste while keeping
-# every sweep on the same two executables (2-subnet + 4-subnet).
+# 6 workloads x 4 modes) are all multiples of 6 once multiplied by any seed
+# count, so 6 gives zero padding waste while keeping every sweep on the one
+# shared S/V-padded executable.
 SWEEP_TILE = 6
+
+# Mesh axis name the sharded sweep path splits the batch axis over.
+SWEEP_AXIS = "sweep"
 
 
 def sweep(
     specs: Sequence[SweepSpec],
     batch_tile: int | None = SWEEP_TILE,
+    devices: int | None = None,
+    mesh=None,
     **overrides,
 ) -> list[SimResult]:
     """Run a heterogeneous sweep, batching rows that share an executable.
 
-    Rows are grouped by `static_spec()` (in practice: 2-subnet vs 4-subnet),
-    each group runs through `simulate_batch`, and results come back as one
-    `SimResult` per spec, in input order.  `overrides` are forwarded to every
-    row's `NoCConfig` (e.g. n_epochs=30).
+    Rows are grouped by `static_spec()` — since the S-padding refactor
+    (DESIGN.md §10) every mode shares one spec, so the whole sweep is a
+    single group and dispatches once — each group runs through
+    `simulate_batch`, and results come back as one `SimResult` per spec, in
+    input order.  `overrides` are forwarded to every row's `NoCConfig`
+    (e.g. n_epochs=30); `devices`/`mesh` select the device-sharded dispatch
+    path (see `simulate_batch`).
     """
     specs = list(specs)
     rows: list[SimResult | None] = [None] * len(specs)
@@ -667,10 +783,31 @@ def sweep(
             [cfgs[i] for i in idxs],
             [PROFILES[specs[i].workload] for i in idxs],
             batch_tile=batch_tile,
+            devices=devices,
+            mesh=mesh,
         )
         for j, i in enumerate(idxs):
             rows[i] = _tree_rows(res, j)
     return rows
+
+
+def sweep_sharded(
+    specs: Sequence[SweepSpec],
+    devices: int | None = None,
+    mesh=None,
+    **overrides,
+) -> list[SimResult]:
+    """`sweep` with the flat point list data-parallel across devices.
+
+    The point list is padded to a multiple of the device count (pad rows
+    repeat row 0 and are discarded), then the whole sweep runs as ONE
+    shard_map dispatch of the shared padded program.  Defaults to all local
+    devices; results are identical to `sweep` row-for-row.
+    """
+    if mesh is None and devices is None:
+        devices = len(jax.devices())
+    return sweep(specs, batch_tile=None, devices=devices, mesh=mesh,
+                 **overrides)
 
 
 def run_workload(mode: str, workload: str, **overrides) -> SimResult:

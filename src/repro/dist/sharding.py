@@ -224,6 +224,29 @@ def constrain(x, *logical_axes):
 
 
 # --------------------------------------------------------------------------
+# Host-local sweep mesh
+# --------------------------------------------------------------------------
+
+def sweep_mesh(n_devices: Optional[int] = None, axis: str = "sweep"):
+    """A 1-D mesh over host-local devices for data-parallel sweep dispatch.
+
+    The NoC sweep engine (core/noc/sim.py) splits its flat batch axis over
+    this mesh's single `sweep` axis — pure data parallelism, no collectives,
+    so the shard_map shim below stays on the psum-safe path on every jax
+    version.  `n_devices=None` takes every local device.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 0 < n <= len(devs):
+        raise ValueError(
+            f"sweep_mesh over {n} devices, but {len(devs)} are available"
+        )
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (axis,))
+
+
+# --------------------------------------------------------------------------
 # shard_map version compat
 # --------------------------------------------------------------------------
 

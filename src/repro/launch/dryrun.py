@@ -20,7 +20,6 @@ import time
 import traceback
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -27,7 +27,6 @@ import dataclasses
 import re
 from typing import Optional
 
-import numpy as np
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12     # bf16

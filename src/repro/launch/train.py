@@ -12,7 +12,6 @@ configuration model.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import numpy as np

@@ -13,7 +13,7 @@ DESIGN.md — it does not change shapes, sharding, or FLOPs).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ re-collected outputs; prefill is `forward(..., return_caches=True)`.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

@@ -8,13 +8,10 @@ hybrid shared-attn) because it operates structurally on the pytree.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
 from repro.models import lm
-from repro.models.config import ModelConfig
 
 Array = jax.Array
 

@@ -18,10 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
-import jax
-import numpy as np
 
 from repro.ckpt import io as ckpt_io
 from repro.data.prefetch import Prefetcher

@@ -18,13 +18,11 @@ VC/arbiter reconfiguration changes packet scheduling, not packet payloads.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -1,7 +1,6 @@
 """System-level invariants: packet conservation in the NoC sim, SSM slot
 algebra in the serving engine, cross-pod group classification."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

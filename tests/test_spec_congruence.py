@@ -6,7 +6,6 @@ from jax.sharding import PartitionSpec as P
 
 import repro.configs as configs
 from repro.launch import specs as launch_specs
-from repro.train import optimizer as opt_lib
 
 
 @pytest.mark.parametrize("arch", configs.ARCH_IDS)

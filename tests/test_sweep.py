@@ -1,13 +1,21 @@
 """Batched sweep engine: equivalence with per-config runs + compile budget.
 
-The contract of `sim.simulate_batch` / `sim.sweep` (DESIGN.md §4):
+The contract of `sim.simulate_batch` / `sim.sweep` (DESIGN.md §4, §10):
 
   1. a batch row is bit-for-bit the same simulation as a standalone
      `simulate()` with the same config/workload/seed;
-  2. the whole paper evaluation (Fig 2/3 grid + Fig 9/10/11 grid) costs at
-     most TWO traces of the simulator — the unified 2-subnet program and
-     the structurally different 4-subnet one.
+  2. the S/V-padded shared program is bit-for-bit the mode's dedicated
+     (unpadded) trace — padding must be invisible in every counter;
+  3. the whole paper evaluation (Fig 2/3 + Fig 9/10/11 + Fig 12) costs
+     exactly ONE trace of the simulator — 4-subnet included;
+  4. `sweep_sharded` returns `sweep`'s rows exactly, including on a ragged
+     (non-divisible) point count.
 """
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import numpy as np
 import pytest
@@ -17,6 +25,7 @@ from repro.core.noc.sim import NoCConfig, SweepSpec
 from repro.core.noc.traffic import PROFILES
 
 FAST = dict(n_epochs=8, epoch_len=100)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def _assert_rows_equal(row, ref, label):
@@ -52,18 +61,93 @@ def test_sweep_rows_match_per_config_simulate():
         _assert_rows_equal(row, ref, f"{sp.mode}/{sp.workload}/g{sp.static_gpu_vcs}/s{sp.seed}")
 
 
-def test_paper_sweeps_compile_at_most_twice():
-    """Fig 2/3 + Fig 9/10/11 together: <= 2 traces (2-subnet + 4-subnet)."""
-    from benchmarks import fig2_3_vc_sweep, fig9_10_11_configs
+def test_paper_sweeps_compile_exactly_once():
+    """Fig 2/3 + Fig 9/10/11 + Fig 12 together: ONE trace (DESIGN.md §10).
+
+    Since the subnet axis is S-padded and the structure traced, the
+    4-subnet network no longer compiles its own program — the entire paper
+    evaluation is one executable.  (Tightened from <= 2 when S-padding
+    landed.)
+    """
+    from benchmarks import fig2_3_vc_sweep, fig9_10_11_configs, fig12_dynamic_kf
 
     mini = dict(n_epochs=3, epoch_len=150, seeds=(0,))
     sim.reset_trace_count()
     fig2_3_vc_sweep.run(**mini)
     fig9_10_11_configs.run(**mini)
-    assert sim.trace_count() <= 2, (
-        f"paper sweeps traced simulate {sim.trace_count()} times; the "
-        "2-subnet modes must share one program and 4subnet adds the other"
+    fig12_dynamic_kf.run(**mini)
+    assert sim.trace_count() == 1, (
+        f"paper sweeps traced simulate {sim.trace_count()} times; all modes "
+        "(4subnet included) must share the one S/V-padded program"
     )
+
+
+def test_padded_program_matches_dedicated_trace():
+    """S/V-padding equivalence: the shared padded program reproduces the
+    mode's dedicated trace bit-for-bit — per-seed counters included.
+
+    4subnet is the load-bearing case (padded V with masked upper VCs AND
+    a re-indexed switch-allocation requester space); one 2-subnet mode
+    guards the padded-subnet direction.
+    """
+    for mode, wl in (("4subnet", "STO"), ("kf", "PATH")):
+        for seed in (0, 1):
+            cfg = NoCConfig(mode=mode, seed=seed, **FAST)
+            pad = sim.simulate(cfg, PROFILES[wl])
+            ded = sim.simulate(cfg, PROFILES[wl], padded=False)
+            label = f"{mode}/{wl}/s{seed}"
+            _assert_rows_equal(pad, ded, f"padded vs dedicated {label}")
+            for name, a, b in zip(
+                pad.counters._fields, pad.counters, ded.counters
+            ):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{label}: counter {name} not bitwise equal",
+                )
+
+
+def test_sweep_sharded_matches_sweep_on_ragged_batch():
+    """`sweep_sharded` == `sweep` on a point count that does NOT divide the
+    device count (5 points, 4 devices -> one pad row per the padding rule).
+
+    Runs in a subprocess because the XLA device count is locked at first
+    jax init (same pattern as tests/test_multidevice.py).
+    """
+    body = """
+        import jax, numpy as np
+        from repro.core.noc import sim
+        from repro.core.noc.sim import SweepSpec
+        FAST = dict(n_epochs=2, epoch_len=50)
+        specs = [
+            SweepSpec("baseline", "PATH"),
+            SweepSpec("4subnet", "LIB", seed=1),
+            SweepSpec("kf", "STO", seed=2),
+            SweepSpec("static", "PATH", static_gpu_vcs=3, seed=3),
+            SweepSpec("fair", "BFS", seed=4),
+        ]
+        assert len(jax.devices()) == 4
+        rows = sim.sweep(specs, **FAST)
+        rows_sh = sim.sweep_sharded(specs, devices=4, **FAST)
+        for i, (a, b) in enumerate(zip(rows, rows_sh)):
+            for (p, x), (_, y) in zip(
+                jax.tree_util.tree_leaves_with_path(a),
+                jax.tree_util.tree_leaves_with_path(b),
+            ):
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y),
+                    err_msg=f"row {i} {jax.tree_util.keystr(p)}")
+        print("SHARDED_RAGGED_OK")
+    """
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED_RAGGED_OK" in out.stdout
 
 
 def test_batch_profile_broadcast_and_seed_override():
@@ -79,9 +163,18 @@ def test_batch_profile_broadcast_and_seed_override():
 
 
 def test_batch_rejects_mixed_structures():
-    cfgs = [NoCConfig(mode="baseline", **FAST), NoCConfig(mode="4subnet", **FAST)]
+    """Genuinely structural differences still refuse to batch — but mode is
+    no longer one of them: 2-subnet and 4-subnet rows share the padded
+    program (DESIGN.md §10) and batch together."""
+    cfgs = [NoCConfig(mode="baseline", **FAST),
+            NoCConfig(mode="baseline", n_epochs=4, epoch_len=100)]
     with pytest.raises(ValueError, match="structural"):
         sim.simulate_batch(cfgs, PROFILES["PATH"])
+
+    mixed = [NoCConfig(mode="baseline", **FAST),
+             NoCConfig(mode="4subnet", **FAST)]
+    res = sim.simulate_batch(mixed, PROFILES["PATH"])
+    assert res.gpu_ipc.shape[0] == 2
 
 
 def test_summarize_seeds_reports_mean_and_std():
