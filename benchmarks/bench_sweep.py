@@ -108,19 +108,27 @@ def _assert_batches_equal(a, b, label: str) -> None:
         )
 
 
+def state_bytes(stc) -> int:
+    """Per-row carry footprint of the packed cycle-engine state (bytes)."""
+    leaves = jax.tree.leaves(sim.init_sim_state(stc))
+    return int(sum(x.size * x.dtype.itemsize for x in leaves))
+
+
 def run(n_epochs: int = 8, epoch_len: int = 100,
         seeds=(0, 1), smoke: bool = False, devices: int | None = None) -> dict:
     """Default grid: 24 points x 800 cycles — the smoke/--fast sweep regime
     where the seed's per-point recompile dominated wall-clock.
 
     Reading the record: on CPU the end-to-end win is compile amortization
-    (N dedicated compiles -> 1).  Steady-state is the deliberate price of
-    the S/V-padded single-trace program (DESIGN.md §10): a 2-subnet-only
-    grid pays ~2-2.5x per dispatch for the padded subnet rows, which buys
-    the single executable, device sharding, and accelerator-side batch
-    parallelism.  `speedup_steady` is reported (watch it in the
-    trajectory) but not CI-gated — at smoke scale it is noise-dominated
-    (observed 0.4-1.1x run to run)."""
+    (N dedicated compiles -> 1).  Steady-state was the weak axis of the
+    S/V-padded single-trace program until the packed-lane cycle engine
+    (DESIGN.md §11) — the padded program's per-dispatch cost now tracks the
+    dedicated traces (full-grid `speedup_steady` ~1x, up from 0.39), so a
+    full-grid row regressing on it is a real engine cliff and
+    `benchmarks/check_bench.py` gates it.  SMOKE rows are different: their
+    steady pass is milliseconds of scan against fixed per-op dispatch
+    overhead, swinging 0.2-1x run to run — meaningless for trend-reading,
+    which is why only full rows land in BENCH_noc.json."""
     workloads = ("PATH", "LIB") if smoke else ("PATH", "LIB", "STO", "MUM")
     ratios = (1, 3) if smoke else (1, 2, 3)
     if smoke:
@@ -141,10 +149,14 @@ def run(n_epochs: int = 8, epoch_len: int = 100,
 
     serial_steady = time_serial_steady(cfgs, profs)
 
+    stc = cfgs[0].static_spec()
     rec = {
         "bench": "noc_sweep_serial_vs_batched",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": jax.default_backend(),
+        "sim_backend": stc.backend,
+        "cycle_unroll": stc.cycle_unroll,
+        "state_bytes": state_bytes(stc),
         "smoke": smoke,
         "grid": {"workloads": list(workloads), "ratios": list(ratios),
                  "seeds": list(seeds), "n_epochs": n_epochs,

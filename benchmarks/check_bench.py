@@ -1,27 +1,35 @@
 """Perf-regression gate over the committed BENCH_noc.json trajectory.
 
-Re-runs the sweep smoke grid (`bench_sweep.run(smoke=True)`) and fails if
-the engine regressed versus the last committed `noc_sweep_serial_vs_batched`
-row on either guarded axis:
+Re-runs the sweep grid (`bench_sweep.run`) and fails if the engine
+regressed versus the last committed `noc_sweep_serial_vs_batched` row on a
+guarded axis:
 
   * trace count — the batched arm must not trace the simulator more often
     than the committed row did (1 since the S-padding refactor; the whole
     point of the engine is that the sweep is ONE compiled program);
-  * end-to-end speedup — the smoke grid's serial-vs-batched speedup must
-    clear an absolute floor AND a fraction of the committed row's speedup.
-    The committed row is usually the full grid, whose per-point compile
-    amortization is stronger than the smoke grid's, so the fraction is
-    deliberately loose — this is a cliff detector (e.g. the jit-cache
-    identity gotcha quietly rebatching the serial arm, or a retrace per
-    point sneaking back in), not a 5%-noise tripwire.
+  * end-to-end speedup — the serial-vs-batched speedup must clear an
+    absolute floor AND a fraction of the committed row's speedup.  The
+    fraction is deliberately loose — this is a cliff detector (e.g. the
+    jit-cache identity gotcha quietly rebatching the serial arm, or a
+    retrace per point sneaking back in), not a 5%-noise tripwire;
+  * steady-state speedup (full grid only) — the packed-lane cycle engine
+    (DESIGN.md §11) recovered `speedup_steady` to ~1x from the 0.39 the
+    padded program paid before it, and this gate keeps it recovered: a
+    fresh full-grid row must clear an absolute floor and a fraction of the
+    committed row's steady speedup.
 
-`speedup_steady` is intentionally NOT gated: at smoke scale the steady
-pass is milliseconds of scan work and swings 0.4-1.1x run to run, and the
-S/V-padded program's ~2x steady cost on 2-subnet-only grids is a known,
-documented trade (DESIGN.md §10, bench_sweep.run docstring) — gate it and
-the gate flakes; watch the full-grid trajectory rows instead.
+`--grid smoke` keeps the old fast mode: trace + end-to-end gates on the
+tiny CI grid, with the steady gate skipped — a smoke steady pass is
+milliseconds of scan against fixed per-op dispatch overhead (observed
+0.2-1x run to run), so gating it would only add flakes.  The default full
+grid takes a few minutes (24 fresh serial compiles) but measures a steady
+state worth gating.
 
-    PYTHONPATH=src python -m benchmarks.check_bench
+Pre-PR-3 BENCH rows lack some of the guarded fields (`batched_traces`,
+`speedup_steady`); a missing baseline field downgrades that gate to its
+absolute floor instead of raising KeyError.
+
+    PYTHONPATH=src python -m benchmarks.check_bench [--grid smoke|full]
 
 Exit code 0 = within tolerance, 1 = regression (message says which gate).
 """
@@ -34,8 +42,10 @@ import sys
 
 from benchmarks import bench_sweep
 
-DEFAULT_MIN_SPEEDUP = 1.5  # absolute floor for the smoke grid
-DEFAULT_FRAC = 0.25  # of the last committed row's speedup
+DEFAULT_MIN_SPEEDUP = 1.5  # absolute end-to-end floor
+DEFAULT_FRAC = 0.25  # of the last committed row's end-to-end speedup
+DEFAULT_MIN_STEADY = 0.4  # absolute steady floor (full grid; pre-§11 was 0.39)
+DEFAULT_STEADY_FRAC = 0.5  # of the last committed row's steady speedup
 
 
 def last_committed_row(path: str, bench: str = "noc_sweep_serial_vs_batched"):
@@ -48,8 +58,15 @@ def last_committed_row(path: str, bench: str = "noc_sweep_serial_vs_batched"):
     return rows[-1]
 
 
-def check(rec: dict, baseline: dict, min_speedup: float, frac: float) -> list:
-    """Return the list of violated gates (empty = pass)."""
+def check(rec: dict, baseline: dict, min_speedup: float, frac: float,
+          min_steady: float = DEFAULT_MIN_STEADY,
+          steady_frac: float = DEFAULT_STEADY_FRAC,
+          gate_steady: bool = True) -> list:
+    """Return the list of violated gates (empty = pass).
+
+    Baseline fields may be absent (pre-PR-3 rows): a missing field drops
+    the relative term of its gate, leaving the absolute floor.
+    """
     failures = []
     allowed = baseline.get("batched_traces", 1)
     got = rec["batched_traces"]
@@ -58,37 +75,77 @@ def check(rec: dict, baseline: dict, min_speedup: float, frac: float) -> list:
             f"trace regression: batched arm traced simulate {got}x "
             f"(committed row: {allowed}x)"
         )
-    floor = max(min_speedup, frac * baseline["speedup_end_to_end"])
+
+    base_e2e = baseline.get("speedup_end_to_end")
+    floor = (
+        max(min_speedup, frac * base_e2e)
+        if base_e2e is not None
+        else min_speedup
+    )
     speedup = rec["speedup_end_to_end"]
     if speedup < floor:
         failures.append(
             f"speedup regression: end-to-end {speedup}x < floor {floor:.2f}x "
-            f"(committed row: {baseline['speedup_end_to_end']}x, "
-            f"frac {frac}, abs min {min_speedup})"
+            f"(committed row: {base_e2e}x, frac {frac}, abs min {min_speedup})"
         )
+
+    if gate_steady:
+        base_steady = baseline.get("speedup_steady")
+        steady_floor = (
+            max(min_steady, steady_frac * base_steady)
+            if base_steady is not None
+            else min_steady
+        )
+        committed = (
+            f"committed row: {base_steady}x, frac {steady_frac}, "
+            if base_steady is not None
+            else "committed row predates speedup_steady, "
+        )
+        steady = rec["speedup_steady"]
+        if steady < steady_floor:
+            failures.append(
+                f"steady-state regression: {steady}x < floor "
+                f"{steady_floor:.2f}x ({committed}abs min {min_steady}) — "
+                "the packed-lane cycle engine (DESIGN.md §11) is supposed "
+                "to keep the padded program at parity with the dedicated "
+                "traces"
+            )
     return failures
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", choices=("full", "smoke"), default="full",
+                    help="full: default bench grid, all gates incl. steady; "
+                         "smoke: tiny grid, steady gate skipped (noise)")
     ap.add_argument("--min-speedup", type=float, default=DEFAULT_MIN_SPEEDUP)
     ap.add_argument("--frac", type=float, default=DEFAULT_FRAC)
+    ap.add_argument("--min-steady", type=float, default=DEFAULT_MIN_STEADY)
+    ap.add_argument("--steady-frac", type=float, default=DEFAULT_STEADY_FRAC)
     ap.add_argument("--bench-json", default=bench_sweep.BENCH_PATH)
     args = ap.parse_args(argv)
 
     baseline = last_committed_row(args.bench_json)
-    rec = bench_sweep.run(smoke=True)
+    rec = bench_sweep.run(smoke=args.grid == "smoke")
     print(json.dumps(rec, indent=2))
 
-    failures = check(rec, baseline, args.min_speedup, args.frac)
+    failures = check(
+        rec, baseline, args.min_speedup, args.frac,
+        min_steady=args.min_steady, steady_frac=args.steady_frac,
+        gate_steady=args.grid == "full",
+    )
     if failures:
         for failure in failures:
             print(f"BENCH REGRESSION: {failure}", file=sys.stderr)
         return 1
+    steady_note = (
+        f", steady {rec['speedup_steady']}x" if args.grid == "full"
+        else " (steady not gated on smoke)"
+    )
     print(
         f"bench gate OK: {rec['batched_traces']} trace(s), "
-        f"{rec['speedup_end_to_end']}x end-to-end (committed: "
-        f"{baseline['speedup_end_to_end']}x on "
+        f"{rec['speedup_end_to_end']}x end-to-end{steady_note} (committed: "
+        f"{baseline.get('speedup_end_to_end')}x on "
         f"{baseline['grid']['n_points']} points)"
     )
     return 0

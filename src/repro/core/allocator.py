@@ -219,6 +219,18 @@ def apply_policy_gated(
     )
 
 
+def epoch_sa_prefs(policy: ModePolicy, config: Array, cycles: Array) -> Array:
+    """Per-cycle SA preference stream for one epoch (cycle-engine `xs`).
+
+    `config` is frozen between epoch boundaries (`apply_policy_gated` runs
+    only after the inner cycle scan), so the whole epoch's switch-arbitration
+    preference classes can be precomputed from the cycle numbers instead of
+    branching per cycle: returns (len(cycles),) int32, -1 for round-robin.
+    """
+    pattern = sa_priority_pattern(config, cycles)
+    return jnp.where(policy.sa_enable, pattern, jnp.int32(-1))
+
+
 def vc_partition(config: Array, n_vcs: int = 4) -> tuple[Array, Array]:
     """Return boolean masks (gpu_vcs, cpu_vcs) over VC indices.
 

@@ -1,25 +1,45 @@
-"""Flit-level router microarchitecture, fully vectorized over routers.
+"""Flit-level router microarchitecture, fully vectorized over (subnet, router).
 
-Models one subnet of the paper's network (Fig. 6): per-input-port VC FIFOs
-with credit flow control, XY routing, VC allocation at the downstream router
-constrained by the class partition (Fig. 7), and switch allocation that is
-either round-robin or the KF-triggered 2:1 GPU-priority pattern (Fig. 8).
+Models the paper's network (Fig. 6): per-input-port VC FIFOs with credit flow
+control, XY routing, VC allocation at the downstream router constrained by
+the class partition (Fig. 7), and switch allocation that is either
+round-robin or the KF-triggered 2:1 GPU-priority pattern (Fig. 8).
 
-State layout (one subnet):
-  buf_dest / buf_src / buf_cls / buf_birth : (R, P, V, B) int32 ring FIFOs
-  head, count                              : (R, P, V)    int32
-  rr_ptr                                   : (R, P)       int32  per-output RR pointer
+Packed-lane state layout (DESIGN.md §11) — every subnet's buffers live in one
+(S, R, P, V, B) block with narrow dtypes on the scan-bound hot loop:
+
+  buf_meta  : (S, R, P, V, B) int16 — dest | src << 6 | cls << 12
+  buf_binj  : (S, R, P, V, B) int32 — injection timestamp (network latency)
+  head, count : (S, R, P, V)  int8
+  rr_ptr      : (S, R, P)     int8  per-output RR pointer over P*V requesters
+
+Generation timestamps (the old `buf_birth` chain: source queue -> request ->
+MC queue -> reply) were carried end-to-end but never consumed by any counter
+or metric — every latency figure uses the injection stamp `binj` (network
+time, Fig. 11).  The dead chain was eliminated: on the memory-bound cycle
+loop it cost a full int32 buffer in every peek/select/write.  Reintroduce a
+`buf_birth` alongside a round-trip-latency metric if one is ever needed.
 
 All packets are single-flit (DESIGN.md §8.2); B is the per-VC buffer depth
 (paper: 4).  One traversal per output port and at most one per input port per
 cycle (a crossbar has one input per port).
 
-The cycle function is pure: (state, masks, rng) -> (state, events); `sim.py`
-wraps it in `lax.scan`.
+The cycle engine is SCATTER-FREE: every buffer write site has a unique,
+statically-known source (the link into input port p of router r can only be
+driven by `neighbor[r, p]`'s output port `opposite[p]`), so each update is a
+dense masked `where` over the full state block instead of an XLA scatter.
+XLA:CPU executes scatters as serial per-update loops, which made the old
+formulation the dominant cost of the batched sweep; the dense form vectorizes
+on CPU and maps directly onto accelerator lanes.
+
+`arbitrate` is the pure switch-allocation inner loop (VC allocation +
+per-output RR arbitration + grant filtering), shared by the default jnp path
+and the Pallas kernel in `repro.kernels.noc_cycle` (which must agree with it
+bitwise — see tests/test_cycle_engine.py).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -29,91 +49,128 @@ from repro.core.noc.topology import N_PORTS, PORT_L, Topology
 Array = jax.Array
 BIG = jnp.int32(1 << 20)
 
+# meta packing: dest | src << 6 | cls << 12 (needs R <= 64, cls in {0, 1})
+META_SRC_SHIFT = 6
+META_CLS_SHIFT = 12
+
+
+def pack_meta(dest: Array, src: Array, cls: Array) -> Array:
+    """Pack (dest, src, cls) into one int16 word (values are < 64 / < 64 / 1b)."""
+    word = dest + (src << META_SRC_SHIFT) + (cls << META_CLS_SHIFT)
+    return word.astype(jnp.int16)
+
+
+def unpack_meta(meta: Array) -> tuple[Array, Array, Array]:
+    """Inverse of `pack_meta`; returns int32 (dest, src, cls)."""
+    w = meta.astype(jnp.int32)
+    dest = w & ((1 << META_SRC_SHIFT) - 1)
+    src = (w >> META_SRC_SHIFT) & ((1 << (META_CLS_SHIFT - META_SRC_SHIFT)) - 1)
+    cls = w >> META_CLS_SHIFT
+    return dest, src, cls
+
 
 class SubnetState(NamedTuple):
-    buf_dest: Array   # (R, P, V, B)
-    buf_src: Array
-    buf_cls: Array
-    buf_birth: Array  # generation timestamp (round-trip latency)
-    buf_binj: Array   # injection timestamp (network latency, Fig. 11)
-    head: Array       # (R, P, V)
-    count: Array      # (R, P, V)
-    rr_ptr: Array     # (R, P) round-robin pointer over P*V requester index
+    buf_meta: Array   # (S, R, P, V, B) int16 — dest | src<<6 | cls<<12
+    buf_binj: Array   # (S, R, P, V, B) int32 injection timestamp (Fig. 11)
+    head: Array       # (S, R, P, V) int8
+    count: Array      # (S, R, P, V) int8
+    rr_ptr: Array     # (S, R, P) int8 round-robin pointer over P*V index
 
 
 class CycleEvents(NamedTuple):
     """Per-cycle outputs consumed by metrics / the MC model."""
 
-    # ejected-at-local packets, one slot per router (<=1 ejection/router/cycle)
-    eject_valid: Array   # (R,) bool
-    eject_dest: Array    # (R,) int32 (== router id when valid)
-    eject_src: Array     # (R,)
-    eject_cls: Array     # (R,)
-    eject_birth: Array   # (R,) generation timestamp
-    eject_binj: Array    # (R,) injection timestamp
+    # ejected-at-local packets (<= 1 ejection/router/cycle per subnet)
+    eject_valid: Array   # (S, R) bool
+    eject_src: Array     # (S, R) int32
+    eject_cls: Array     # (S, R) int32
+    eject_binj: Array    # (S, R) int32 injection timestamp
     moved: Array         # () int32 — switch traversals this cycle (utilization)
     dram_block_gpu: Array  # () int32 — GPU ejections blocked by a full MC queue
     dram_block_cpu: Array  # () int32 — CPU ejections blocked by a full MC queue
 
 
-def _peek_heads(state: SubnetState):
-    """Gather head-of-line packet fields -> (R, P, V) each + validity."""
-    idx = state.head[..., None]  # (R,P,V,1)
-    dest = jnp.take_along_axis(state.buf_dest, idx, axis=3)[..., 0]
-    src = jnp.take_along_axis(state.buf_src, idx, axis=3)[..., 0]
-    cls = jnp.take_along_axis(state.buf_cls, idx, axis=3)[..., 0]
-    birth = jnp.take_along_axis(state.buf_birth, idx, axis=3)[..., 0]
-    binj = jnp.take_along_axis(state.buf_binj, idx, axis=3)[..., 0]
-    valid = state.count > 0
-    return dest, src, cls, birth, binj, valid
+class Arbitration(NamedTuple):
+    """Outputs of the switch-allocation inner loop (shapes lead with `...`)."""
+
+    grant: Array    # (..., O) bool — output port fires this cycle
+    winner: Array   # (..., O) int32 — flat P*V requester index per output
+    down_vc: Array  # (..., O) int32 — downstream VC granted to the winner
+    deq: Array      # (..., P*V) bool — head packet pops this cycle
+    new_rr: Array   # (..., O) int32 — advanced round-robin pointer
+    any_req: Array  # (..., O) bool — some head packet wants this output
+    w_cls: Array    # (..., O) int32 — class of the winning packet
 
 
-def _dequeue(state: SubnetState, deq_mask: Array) -> SubnetState:
-    """deq_mask: (R, P, V) bool — pop head where True."""
-    depth = state.buf_dest.shape[3]
-    new_head = jnp.where(deq_mask, (state.head + 1) % depth, state.head)
-    new_count = state.count - deq_mask.astype(jnp.int32)
-    return state._replace(head=new_head, count=new_count)
+def arbitrate(
+    valid: Array,        # (..., P*V) bool — head packet present
+    cls: Array,          # (..., P*V) int32 — head packet class (0/1)
+    out_port: Array,     # (..., P*V) int32 — desired output port (XY route)
+    rr_ptr: Array,       # (..., O) int32 — per-output RR pointer
+    down_count: Array,   # (..., O, V) int32 — VC occupancy at the downstream
+    down_exists: Array,  # (..., O) bool — a link exists through this output
+    gpu_vc_mask: Array,  # (..., V) bool — VCs GPU packets may occupy
+    cpu_vc_mask: Array,  # (..., V) bool
+    sa_pref: Array,      # (...,) int32: -1 round-robin, else preferred class
+    accept: Array,       # (...,) bool — ejection credit at the local sink
+    active: Array,       # (...,) bool — link active (4-subnet: half width)
+    *,
+    depth: int,
+) -> Arbitration:
+    """One switch-allocation step: per (…, out_port) pick one (in_port, vc).
 
-
-def _enqueue_at(
-    state: SubnetState,
-    r: Array, p: Array, v: Array,          # (K,) flat target coordinates
-    dest: Array, src: Array, cls: Array, birth: Array, binj: Array,
-    valid: Array,                           # (K,) bool
-) -> SubnetState:
-    """Scatter-enqueue K packets at (r, p, v). Targets are unique when valid."""
-    depth = state.buf_dest.shape[3]
-    tail = (state.head[r, p, v] + state.count[r, p, v]) % depth
-    # invalid writes get an out-of-bounds slot index: JAX scatter drops them,
-    # so they can never race with a valid write to the same FIFO slot.
-    tail = jnp.where(valid, tail, depth)
-
-    def scat(buf, val):
-        return buf.at[r, p, v, tail].set(val, mode="drop")
-
-    state = state._replace(
-        buf_dest=scat(state.buf_dest, dest),
-        buf_src=scat(state.buf_src, src),
-        buf_cls=scat(state.buf_cls, cls),
-        buf_birth=scat(state.buf_birth, birth),
-        buf_binj=scat(state.buf_binj, binj),
-        count=state.count.at[r, p, v].add(valid.astype(jnp.int32)),
-    )
-    return state
-
-
-def free_vc_for_class(
-    count: Array, cls_allowed_mask: Array, depth: int
-) -> tuple[Array, Array]:
-    """Pick the lowest-index allowed VC with space at each (R, P).
-
-    count: (R, P, V); cls_allowed_mask: (R, P, V) bool (class partition).
-    Returns (vc_index (R,P) int32, available (R,P) bool).
+    Pure dense math (no gather/scatter): this is the function the Pallas
+    `noc_cycle` kernel reimplements over a flattened lane axis, and the two
+    must agree bitwise on every output.
     """
-    has_space = (count < depth) & cls_allowed_mask
-    vc = jnp.argmax(has_space, axis=-1).astype(jnp.int32)
-    return vc, jnp.any(has_space, axis=-1)
+    PV = valid.shape[-1]
+    oid = jnp.arange(N_PORTS, dtype=jnp.int32)
+    pv = jnp.arange(PV, dtype=jnp.int32)
+    pv16 = jnp.arange(PV, dtype=jnp.int16)
+    big16 = jnp.int16(PV * (2 * PV + 1))  # > any live packed key
+
+    # requester matrix + round-robin key relative to the per-output pointer.
+    # The (..., PV, O) intermediates dominate this function's memory traffic,
+    # so the key math runs in int16 (max packed value PV*(2PV)+PV-1 << 2^15).
+    req = valid[..., :, None] & (out_port[..., :, None] == oid)   # (...,PV,O)
+    # KF=1: prefer the pattern class first (paper Fig. 8, 2 GPU : 1 CPU);
+    # the penalty is per requester (no O axis needed)
+    is_pref = (cls == sa_pref[..., None]) | (sa_pref[..., None] < 0)
+    penalty = jnp.where(is_pref, jnp.int16(0), jnp.int16(PV))     # (..., PV)
+    key = (pv16[:, None] - rr_ptr.astype(jnp.int16)[..., None, :]) % PV
+    key = key + penalty[..., :, None]
+    # packed min == argmin (ties break to the lowest pv, like argmin)
+    packed = jnp.where(req, key * PV + pv16[:, None], big16)
+    m = jnp.min(packed, axis=-2).astype(jnp.int32)                # (..., O)
+    winner = m % PV
+    any_req = jnp.any(req, axis=-2)                               # (..., O)
+
+    w_onehot = pv == winner[..., None]                            # (...,O,PV)
+    w_cls = jnp.sum(jnp.where(w_onehot, cls[..., None, :], 0), axis=-1)
+
+    # --- output-side credit check: first free VC the winner's class may use
+    allowed = jnp.where((w_cls == 1)[..., None], gpu_vc_mask[..., None, :],
+                        cpu_vc_mask[..., None, :])                # (...,O,V)
+    has_space = (down_count < depth) & allowed
+    down_vc = jnp.argmax(has_space, axis=-1).astype(jnp.int32)
+    credit_ok = jnp.any(has_space, axis=-1)                       # (..., O)
+
+    is_local = oid == PORT_L
+    eject_ok = is_local & accept[..., None]
+    link_ok = (~is_local) & down_exists & credit_ok
+    grant = any_req & (eject_ok | link_ok) & active[..., None]    # (..., O)
+
+    # --- one traversal per input port: keep the lowest-output grant per port
+    w_port = winner // (PV // N_PORTS)                            # (..., O)
+    rank = jnp.where(grant, oid, BIG)
+    pmatch = w_port[..., None, :] == oid[:, None]                 # (...,P,O)
+    min_rank = jnp.min(jnp.where(pmatch, rank[..., None, :], BIG), axis=-1)
+    sel = jnp.sum(jnp.where(pmatch, min_rank[..., :, None], 0), axis=-2)
+    grant = grant & (rank == sel)
+
+    deq = jnp.any(w_onehot & grant[..., None], axis=-2)           # (...,PV)
+    new_rr = jnp.where(grant, (winner + 1) % PV, rr_ptr)
+    return Arbitration(grant, winner, down_vc, deq, new_rr, any_req, w_cls)
 
 
 def router_cycle(
@@ -121,145 +178,158 @@ def router_cycle(
     topo_route: Array,      # (R, R) int32 device copy of topology.route
     topo_neighbor: Array,   # (R, P)
     topo_opposite: Array,   # (P,)
-    gpu_vc_mask: Array,     # (V,) bool — VCs GPU packets may occupy
-    cpu_vc_mask: Array,     # (V,) bool
+    gpu_vc_mask: Array,     # (S, V) bool — VCs GPU packets may occupy
+    cpu_vc_mask: Array,     # (S, V) bool
     sa_pref_class: Array,   # () int32: -1 round-robin, else preferred class
-    mc_can_accept: Array,   # (R,) bool — ejection credit at local sink
-    active: Array,          # () bool — link active this cycle (4-subnet: half width)
+    mc_can_accept: Array,   # (S, R) bool — ejection credit at local sink
+    active: Array,          # (S,) bool — link active this cycle
+    arbitrate_fn: Callable[..., Arbitration] = arbitrate,
 ) -> tuple[SubnetState, CycleEvents]:
-    R, P, V, B = state.buf_dest.shape
-    dest, src, cls, birth, binj, valid = _peek_heads(state)  # (R,P,V)
+    S, R, P, V, B = state.buf_meta.shape
+    ar = jnp.arange(R)
+
+    # --- peek head-of-line packets -> (S, R, P, V) fields
+    hidx = state.head.astype(jnp.int32)[..., None]
+    meta = jnp.take_along_axis(state.buf_meta, hidx, axis=4)[..., 0]
+    binj = jnp.take_along_axis(state.buf_binj, hidx, axis=4)[..., 0]
+    dest, _, cls = unpack_meta(meta)
+    valid = state.count > 0
 
     # --- route computation: desired output port of each head packet
-    out_port = topo_route[jnp.arange(R)[:, None, None], dest]   # (R,P,V)
+    out_port = topo_route[ar[:, None, None], dest]                # (S,R,P,V)
 
-    # --- switch allocation: per (router, out_port), pick one (in_port, vc)
-    flat = valid.reshape(R, P * V)
-    flat_cls = cls.reshape(R, P * V)
-    req = jnp.zeros((R, P * V, N_PORTS), bool).at[
-        jnp.arange(R)[:, None], jnp.arange(P * V)[None, :],
-        out_port.reshape(R, P * V),
-    ].set(flat)
+    # --- downstream VC occupancy through each output (static-index gather)
+    nb_safe = jnp.maximum(topo_neighbor, 0)                       # (R, O)
+    opp_b = jnp.broadcast_to(topo_opposite[None, :], (R, N_PORTS))
+    down_count = state.count[:, nb_safe, opp_b, :].astype(jnp.int32)
+    down_exists = jnp.broadcast_to(topo_neighbor >= 0, (S, R, N_PORTS))
 
-    # round-robin key relative to per-output pointer
-    idx = jnp.arange(P * V, dtype=jnp.int32)
-    key = (idx[None, :, None] - state.rr_ptr[:, None, :]) % (P * V)  # (R,PV,O)
-    # KF=1: prefer the pattern class first (paper Fig. 8, 2 GPU : 1 CPU)
-    is_pref = (flat_cls[:, :, None] == sa_pref_class) | (sa_pref_class < 0)
-    key = key + jnp.where(is_pref, 0, P * V)
-    key = jnp.where(req, key, BIG)
-    winner = jnp.argmin(key, axis=1).astype(jnp.int32)            # (R, O)
-    any_req = jnp.any(req, axis=1)                                 # (R, O)
-
-    # --- output-side credit checks
-    out_ids = jnp.arange(N_PORTS)
-    w_cls = flat_cls[jnp.arange(R)[:, None], winner]               # (R, O)
-    down_r = topo_neighbor[jnp.arange(R)[:, None], out_ids[None, :]]  # (R,O)
-    down_p = topo_opposite[out_ids][None, :].astype(jnp.int32)     # (1, O) -> bcast
-    down_r_safe = jnp.maximum(down_r, 0)
-
-    allowed = jnp.where(w_cls[..., None] == 1, gpu_vc_mask[None, None, :],
-                        cpu_vc_mask[None, None, :])                # (R,O,V)
-    down_count = state.count[down_r_safe, jnp.broadcast_to(down_p, down_r.shape)]
-    has_space = (down_count < B) & allowed                         # (R,O,V)
-    down_vc = jnp.argmax(has_space, axis=-1).astype(jnp.int32)
-    credit_ok = jnp.any(has_space, axis=-1)                        # (R,O)
-
-    is_local = out_ids[None, :] == PORT_L
-    # local ejection needs the sink (node / MC queue) to accept
-    eject_ok = is_local & mc_can_accept[:, None]
-    link_ok = (~is_local) & (down_r >= 0) & credit_ok
-    grant = any_req & (eject_ok | link_ok) & active                # (R,O)
-
-    # --- one traversal per input port: keep the lowest-output grant per port
-    w_port = winner // V                                           # (R,O)
-    o_rank = jnp.arange(N_PORTS)[None, :].astype(jnp.int32)
-    rank = jnp.where(grant, o_rank, BIG)
-    # min output index per (router, input port)
-    min_rank = jnp.full((R, N_PORTS), BIG, jnp.int32).at[
-        jnp.arange(R)[:, None], w_port
-    ].min(rank)
-    grant = grant & (rank == min_rank[jnp.arange(R)[:, None], w_port])
-
-    # --- apply: dequeue winners
-    deq = jnp.zeros((R, P * V), bool).at[
-        jnp.arange(R)[:, None], winner
-    ].max(grant)
-    state2 = _dequeue(state, deq.reshape(R, P, V))
-
-    # advance RR pointer past the winner on granted outputs
-    new_ptr = jnp.where(grant, (winner + 1) % (P * V), state.rr_ptr)
-    state2 = state2._replace(rr_ptr=new_ptr)
-
-    # --- gather winner packet fields (R, O)
-    def g(x):
-        return x.reshape(R, P * V)[jnp.arange(R)[:, None], winner]
-
-    wd, ws, wc, wb = g(dest), g(src), g(cls), g(birth)
-    wj = g(binj)
-
-    # --- ejections (out_port == Local): <= 1 per router by construction
-    ej = grant & is_local
-    eject_valid = jnp.any(ej, axis=1)
-    ej_slot = jnp.argmax(ej, axis=1)
-    ar = jnp.arange(R)
-    # dramfull stalls: a head packet wants to eject but the sink is full
-    blocked_local = any_req & is_local & ~mc_can_accept[:, None]
-    events = CycleEvents(
-        eject_valid=eject_valid,
-        eject_dest=wd[ar, ej_slot],
-        eject_src=ws[ar, ej_slot],
-        eject_cls=wc[ar, ej_slot],
-        eject_birth=wb[ar, ej_slot],
-        eject_binj=wj[ar, ej_slot],
-        moved=jnp.sum(grant.astype(jnp.int32)),
-        dram_block_gpu=jnp.sum((blocked_local & (w_cls == 1)).astype(jnp.int32)),
-        dram_block_cpu=jnp.sum((blocked_local & (w_cls == 0)).astype(jnp.int32)),
+    arb = arbitrate_fn(
+        valid.reshape(S, R, P * V),
+        cls.reshape(S, R, P * V),
+        out_port.reshape(S, R, P * V),
+        state.rr_ptr.astype(jnp.int32),
+        down_count,
+        down_exists,
+        gpu_vc_mask[:, None, :],
+        cpu_vc_mask[:, None, :],
+        jnp.broadcast_to(sa_pref_class, (S, R)),
+        mc_can_accept,
+        jnp.broadcast_to(active[:, None], (S, R)),
+        depth=B,
     )
 
-    # --- link traversals: enqueue at downstream (r', opposite port, chosen vc)
-    lk = (grant & ~is_local).reshape(-1)
-    state3 = _enqueue_at(
-        state2,
-        down_r_safe.reshape(-1),
-        jnp.broadcast_to(down_p, down_r.shape).reshape(-1),
-        down_vc.reshape(-1),
-        wd.reshape(-1), ws.reshape(-1), wc.reshape(-1), wb.reshape(-1),
-        wj.reshape(-1),
-        lk,
+    # --- apply: dequeue winners, advance RR pointers past them
+    deq = arb.deq.reshape(S, R, P, V)
+    head2 = jnp.where(deq, (state.head + 1) % B, state.head)
+    count2 = state.count - deq.astype(jnp.int8)
+    rr2 = arb.new_rr.astype(state.rr_ptr.dtype)
+
+    # --- gather winner packet fields (S, R, O) — one-hot reduction over the
+    # requester axis (vectorizes; dynamic gather at these indices does not)
+    w_onehot = jnp.arange(P * V) == arb.winner[..., None]         # (S,R,O,PV)
+
+    def gsel(x):  # x: (S, R, P, V) int — select the winner's field per output
+        return jnp.sum(
+            jnp.where(w_onehot, x.reshape(S, R, 1, P * V), 0), axis=-1,
+            dtype=x.dtype,  # one-hot: a single term survives, no overflow
+        )
+
+    w_meta = gsel(meta.astype(jnp.int32))
+    w_binj = gsel(binj)
+    wd, ws, _ = unpack_meta(w_meta)
+
+    # --- ejections: only the Local output column can eject (<=1 per router)
+    ej = arb.grant[..., PORT_L]                                   # (S, R)
+    blocked_local = arb.any_req[..., PORT_L] & ~mc_can_accept
+    blocked_cls = arb.w_cls[..., PORT_L]
+    events = CycleEvents(
+        eject_valid=ej,
+        eject_src=ws[..., PORT_L],
+        eject_cls=arb.w_cls[..., PORT_L],
+        eject_binj=w_binj[..., PORT_L],
+        moved=jnp.sum(arb.grant.astype(jnp.int32)),
+        dram_block_gpu=jnp.sum(
+            (blocked_local & (blocked_cls == 1)).astype(jnp.int32)
+        ),
+        dram_block_cpu=jnp.sum(
+            (blocked_local & (blocked_cls == 0)).astype(jnp.int32)
+        ),
+    )
+
+    # --- link traversals as a dense pull: input port p of router r can only
+    # be driven by neighbor[r, p] through its output port opposite[p], so the
+    # old scatter-enqueue is a static-index gather + masked where.
+    lk = arb.grant & (jnp.arange(N_PORTS) != PORT_L)              # (S, R, O)
+
+    def up(x):  # value at the (unique) upstream driver of each (r, p) input
+        return x[:, nb_safe, opp_b]
+
+    in_ok = up(lk) & (topo_neighbor >= 0)                         # (S, R, P)
+    in_meta = up(w_meta)
+    in_binj = up(w_binj)
+    in_vc = up(arb.down_vc)
+
+    tail = ((head2 + count2) % B).astype(jnp.int32)               # (S,R,P,V)
+    vmask = in_ok[..., None] & (in_vc[..., None] == jnp.arange(V))
+    bmask = vmask[..., None] & (tail[..., None] == jnp.arange(B))
+    state3 = SubnetState(
+        buf_meta=jnp.where(
+            bmask, in_meta[..., None, None].astype(jnp.int16), state.buf_meta
+        ),
+        buf_binj=jnp.where(bmask, in_binj[..., None, None], state.buf_binj),
+        head=head2,
+        count=count2 + vmask.astype(jnp.int8),
+        rr_ptr=rr2,
     )
     return state3, events
 
 
-def inject(
+def inject_all(
     state: SubnetState,
-    r_ids: Array,        # (K,) routers attempting one injection each
-    want: Array,         # (K,) bool
-    dest: Array, src: Array, cls: Array, birth: Array, binj: Array,
-    gpu_vc_mask: Array, cpu_vc_mask: Array,
+    want: Array,         # (S, R) bool — one injection attempt per (subnet, router)
+    dest: Array, src: Array, cls: Array,   # (S, R) int32 packet fields
+    binj: Array,                           # (S, R) int32 injection timestamp
+    gpu_vc_mask: Array, cpu_vc_mask: Array,  # (S, V) bool class VC partition
 ) -> tuple[SubnetState, Array]:
-    """Inject at the Local input port, honoring the class VC partition.
+    """Inject at the Local input port of every (subnet, router) at once.
 
-    Returns (state, accepted (K,) bool).  r_ids must be unique (one attempt
-    per router per cycle — sources queue internally otherwise).
+    Returns (state, accepted (S, R) bool).  Dense formulation of the old
+    per-subnet scatter inject: pick the first free VC the class may use and
+    write the tail slot with a masked where.
     """
-    V = state.count.shape[2]
-    B = state.buf_dest.shape[3]
-    local_count = state.count[r_ids, PORT_L]                       # (K, V)
-    allowed = jnp.where(cls[:, None] == 1, gpu_vc_mask[None, :],
-                        cpu_vc_mask[None, :])
+    S, R, P, V, B = state.buf_meta.shape
+    local_count = state.count[:, :, PORT_L]                       # (S, R, V)
+    allowed = jnp.where(cls[..., None] == 1, gpu_vc_mask[:, None, :],
+                        cpu_vc_mask[:, None, :])
     has_space = (local_count < B) & allowed
     vc = jnp.argmax(has_space, axis=-1).astype(jnp.int32)
     ok = want & jnp.any(has_space, axis=-1)
-    state = _enqueue_at(
-        state, r_ids, jnp.full_like(r_ids, PORT_L), vc,
-        dest, src, cls, birth, binj, ok,
+
+    head_l = state.head[:, :, PORT_L]
+    tail = ((head_l + local_count) % B).astype(jnp.int32)         # (S, R, V)
+    vmask = ok[..., None] & (vc[..., None] == jnp.arange(V))      # (S, R, V)
+    bmask = vmask[..., None] & (tail[..., None] == jnp.arange(B))
+    meta = pack_meta(dest, src, cls)
+
+    def wr(buf, val):
+        val = jnp.asarray(val).astype(buf.dtype)
+        new_local = jnp.where(bmask, val[..., None, None], buf[:, :, PORT_L])
+        return buf.at[:, :, PORT_L].set(new_local)
+
+    state = state._replace(
+        buf_meta=wr(state.buf_meta, meta),
+        buf_binj=wr(state.buf_binj, binj),
+        count=state.count.at[:, :, PORT_L].set(
+            local_count + vmask.astype(jnp.int8)
+        ),
     )
     return state, ok
 
 
 def device_tables(topo: Topology):
     """Move topology tables onto device once per simulation."""
+    assert topo.n_routers <= 64, "meta packing assumes router ids fit 6 bits"
     return (
         jnp.asarray(topo.route),
         jnp.asarray(topo.neighbor),

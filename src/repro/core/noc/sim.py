@@ -52,9 +52,9 @@ from repro.core.allocator import (
     PolicyConfig,
     apply_policy_gated,
     class_vc_masks,
+    epoch_sa_prefs,
     init_policy_state,
     mode_policy,
-    sa_priority_pattern,
 )
 from repro.core.noc import metrics
 from repro.core.noc import router as rt
@@ -65,7 +65,7 @@ from repro.core.noc.traffic import (
     init_phase,
     injection_rates,
     stack_profiles,
-    step_phase,
+    step_phase_u,
 )
 
 Array = jax.Array
@@ -102,6 +102,11 @@ class SimStatic:
     z_scales: tuple[float, float, float]
     kf_q: float
     kf_r: float
+    # cycle-engine knobs (DESIGN.md §11): scan unroll factor for the inner
+    # cycle loop, and which arbitration backend to trace ("ref" = dense jnp,
+    # "pallas" = the repro.kernels.noc_cycle lane kernel).
+    cycle_unroll: int = 1
+    backend: str = "ref"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +131,8 @@ class NoCConfig:
     kf_q: float = 1e-3
     kf_r: float = 2e-1
     seed: int = 0
+    cycle_unroll: int = 1         # inner cycle-scan unroll factor
+    backend: str = "ref"          # arbitration backend: ref | pallas
 
     @property
     def n_subnets(self) -> int:
@@ -156,6 +163,8 @@ class NoCConfig:
             z_scales=tuple(self.z_scales),
             kf_q=self.kf_q,
             kf_r=self.kf_r,
+            cycle_unroll=self.cycle_unroll,
+            backend=self.backend,
         )
 
     def mode_policy(self, padded: bool = True) -> ModePolicy:
@@ -167,16 +176,13 @@ class NoCConfig:
 
 
 class MCState(NamedTuple):
-    q_src: Array      # (R, Q) pending request sources
-    q_cls: Array
-    q_birth: Array    # generation timestamp of the original request
+    q_meta: Array     # (R, Q) int8 — pending request src | cls << 6
     head: Array       # (R,)
     count: Array      # (R,)
     timer: Array      # (R,) cycles until current service completes
     stage_valid: Array  # (R,) staged reply waiting to inject
     stage_dst: Array
     stage_cls: Array
-    stage_birth: Array
 
 
 class EpochCounters(NamedTuple):
@@ -210,6 +216,11 @@ class SimResult(NamedTuple):
     applied_config: Array  # (E,) configuration actually applied
     counters: EpochCounters  # (E,) leaves
     gpu_inj_rate: Array   # (E,) offered GPU load (Fig. 4 trace)
+    # VCs the GPU class could occupy during the epoch — pins the hoisted
+    # per-epoch masks to the policy state that entered the epoch (the mask
+    # flip must trail `applied_config` by exactly one epoch; see
+    # tests/test_cycle_engine.py's policy-boundary regression test).
+    gpu_vc_quota: Array   # (E,)
 
 
 def _make_kf(stc: SimStatic):
@@ -232,30 +243,33 @@ def init_sim_state(stc: SimStatic, batch: int | None = None):
             shape = (batch,) + shape
         return jnp.zeros(shape, dtype)
 
+    # Injection stamps ride uint16 when every possible stamp/age fits: the
+    # latency subtraction is wraparound-exact for ages < 2^16, and a packet
+    # can never outlive the run.  (+1: epoch-end replies are stamped with
+    # the next epoch's first cycle.)
+    binj_dtype = (
+        jnp.uint16
+        if stc.epoch_len * stc.n_epochs + 1 <= 0xFFFF
+        else jnp.int32
+    )
     subnets0 = rt.SubnetState(
-        buf_dest=z((S, R, rt.N_PORTS, V, B)),
-        buf_src=z((S, R, rt.N_PORTS, V, B)),
-        buf_cls=z((S, R, rt.N_PORTS, V, B)),
-        buf_birth=z((S, R, rt.N_PORTS, V, B)),
-        buf_binj=z((S, R, rt.N_PORTS, V, B)),
-        head=z((S, R, rt.N_PORTS, V)),
-        count=z((S, R, rt.N_PORTS, V)),
-        rr_ptr=z((S, R, rt.N_PORTS)),
+        buf_meta=z((S, R, rt.N_PORTS, V, B), jnp.int16),
+        buf_binj=z((S, R, rt.N_PORTS, V, B), binj_dtype),
+        head=z((S, R, rt.N_PORTS, V), jnp.int8),
+        count=z((S, R, rt.N_PORTS, V), jnp.int8),
+        rr_ptr=z((S, R, rt.N_PORTS), jnp.int8),
     )
     mc0 = MCState(
-        q_src=z((R, stc.mc_queue_cap)),
-        q_cls=z((R, stc.mc_queue_cap)),
-        q_birth=z((R, stc.mc_queue_cap)),
+        q_meta=z((R, stc.mc_queue_cap), jnp.int8),
         head=z((R,)),
         count=z((R,)),
         timer=z((R,)),
         stage_valid=z((R,), bool),
         stage_dst=z((R,)),
         stage_cls=z((R,)),
-        stage_birth=z((R,)),
     )
     outstanding0 = z((R,))
-    backlog0 = (z((R, BCAP)), z((R,)), z((R,)))
+    backlog0 = z((R,))  # per-node source-queue depth (see BCAP)
     return subnets0, mc0, outstanding0, backlog0
 
 
@@ -313,181 +327,242 @@ def _simulate_impl(
     kf_params = _make_kf(stc)
     z_scales = jnp.asarray(stc.z_scales, jnp.float32)
 
-    vmapped_cycle = jax.vmap(
-        rt.router_cycle, in_axes=(0, None, None, None, 0, 0, None, 0, 0)
-    )
-    # one injection attempt per (subnet, router); each subnet's state is
-    # independent, so the former per-subnet Python loop is a plain vmap
-    inject_subnets = jax.vmap(
-        rt.inject, in_axes=(0, None, 0, None, None, None, None, None, 0, 0)
-    )
+    # arbitration backend: the dense jnp inner loop, or the Pallas lane
+    # kernel (repro.kernels.noc_cycle, interpret-mode on CPU) — both agree
+    # bitwise (tests/test_cycle_engine.py), so the choice is pure perf.
+    if stc.backend == "pallas":
+        from repro.kernels.noc_cycle.ops import arbitrate_lanes as arb_fn
+    elif stc.backend == "ref":
+        arb_fn = rt.arbitrate
+    else:
+        raise ValueError(f"unknown cycle-engine backend {stc.backend!r}")
 
-    def cycle_body(carry, cycle_key):
-        (subs, mc, phase, outstanding, backlog, cnt, policy, cycle) = carry
-        bl_birth, bl_head, bl_count = backlog
-        k_phase, k_gen, k_dest = jax.random.split(cycle_key, 3)
-        cyc_vec = jnp.full((R,), cycle, jnp.int32)
-
-        config_idx = policy.config
-        g_vec, c_vec = class_vc_masks(mp, config_idx)          # (V,)
-        gpu_masks = jnp.broadcast_to(g_vec, (S, V))
-        cpu_masks = jnp.broadcast_to(c_vec, (S, V))
-        sa_pref = jnp.where(
-            mp.sa_enable, sa_priority_pattern(config_idx, cycle), jnp.int32(-1)
-        )
-
-        # subnet link activation: full width (2-subnet) or alternating-cycle
-        # half width (4-subnet); padded subnet rows are never active.
-        alternating = (cycle % 2) == (jnp.arange(S) % 2)
-        active = sub_enabled & jnp.where(fs, alternating, True)
-
-        # MC acceptance applies to ejections on *request* subnets at MC nodes.
-        # With multiple request subnets (4-subnet mode) up to S/2 packets can
-        # arrive at one MC in a cycle, so reserve that many slots.
-        mc_space = mc.count <= stc.mc_queue_cap - n_req_subs
-        can_accept = jnp.where(is_mc, mc_space, True)  # (R,)
-        accept_s = jnp.where(sub_is_req[:, None], can_accept[None, :], True)
-
-        # ---- 1. MC: inject staged replies into the reply subnet(s),
-        # one batched scatter over all subnets (reply subnet of requester
-        # class c is 2c+1 under class-segregated routing, subnet 1 otherwise)
+    def make_want_rep(mc):
+        """Want-matrix for staged MC replies (reply subnet of requester
+        class c is 2c+1 under class-segregated routing, subnet 1 otherwise)."""
         rep_target = jnp.where(fs, 2 * mc.stage_cls + 1, 1)
-        want_rep = (
+        return (
             (sub_ids[:, None] == rep_target[None, :])
             & (mc.stage_valid & is_mc)[None, :]
             & sub_enabled[:, None]
         )
-        new_subs, ok_rep = inject_subnets(
-            subs, ar, want_rep, mc.stage_dst, ar,
-            mc.stage_cls, mc.stage_birth, cyc_vec, gpu_masks, cpu_masks,
-        )
-        mc = mc._replace(stage_valid=mc.stage_valid & ~jnp.any(ok_rep, axis=0))
-
-        # ---- 2. MC service: tick timers, move head request -> staging
-        can_serve = is_mc & (mc.count > 0) & ~mc.stage_valid
-        timer = jnp.where(can_serve, jnp.maximum(mc.timer - 1, 0), mc.timer)
-        done = can_serve & (timer == 0)
-        hq = mc.head
-        src_out = mc.q_src[ar, hq]
-        cls_out = mc.q_cls[ar, hq]
-        birth_out = mc.q_birth[ar, hq]
-        mc = mc._replace(
-            head=jnp.where(done, (mc.head + 1) % stc.mc_queue_cap, mc.head),
-            count=mc.count - done.astype(jnp.int32),
-            timer=jnp.where(done, stc.mc_service_period, timer),
-            stage_valid=mc.stage_valid | done,
-            stage_dst=jnp.where(done, src_out, mc.stage_dst),
-            stage_cls=jnp.where(done, cls_out, mc.stage_cls),
-            stage_birth=jnp.where(done, birth_out, mc.stage_birth),
-        )
-
-        # ---- 3. route/arbitrate every subnet
-        new_subs, events = vmapped_cycle(
-            new_subs, route_t, nb_t, opp_t,
-            gpu_masks, cpu_masks, sa_pref, accept_s, active,
-        )
-
-        # ---- 4. ejection handling
-        # request-subnet ejections at MC nodes -> enqueue into MC queues.
-        # One scatter for all subnets: a per-subnet exclusive prefix count
-        # serializes same-MC arrivals into consecutive ring slots (4-subnet
-        # mode can deliver two per cycle; `mc_space` reserved slots above).
-        # (`sub_is_req` masks the reduction to live request rows — padded
-        # subnets cannot eject, but the mask keeps the scatter shape-safe.)
-        req_ej = events.eject_valid & sub_is_req[:, None] & is_mc[None, :]  # (S,R)
-        arr_i = req_ej.astype(jnp.int32)
-        slot_off = jnp.cumsum(arr_i, axis=0) - arr_i
-        slot = (mc.head[None, :] + mc.count[None, :] + slot_off) % stc.mc_queue_cap
-        slot = jnp.where(req_ej, slot, stc.mc_queue_cap)  # OOB -> dropped write
-        r_ix = jnp.broadcast_to(ar[None, :], (S, R))
-        mc = mc._replace(
-            q_src=mc.q_src.at[r_ix, slot].set(events.eject_src, mode="drop"),
-            q_cls=mc.q_cls.at[r_ix, slot].set(events.eject_cls, mode="drop"),
-            q_birth=mc.q_birth.at[r_ix, slot].set(
-                events.eject_birth, mode="drop"
-            ),
-            count=mc.count + jnp.sum(arr_i, axis=0),
-        )
-        # reply-subnet ejections at source nodes -> complete transactions
-        # (masked to live reply rows, not just ~sub_is_req, under S-padding)
-        rep_ej = events.eject_valid & sub_is_rep[:, None] & (~is_mc)[None, :]
-        rep_done = jnp.any(rep_ej, axis=0)
-        outstanding = outstanding - rep_done.astype(jnp.int32)
-        rep_cls = jnp.sum(jnp.where(rep_ej, events.eject_cls, 0), axis=0)
-
-        # Fig. 11 packet latency: network time (injection -> ejection)
-        ej_lat = jnp.where(events.eject_valid, cycle - events.eject_binj, 0)
-        cpu_ej = events.eject_valid & (events.eject_cls == 0)
-        gpu_ej = events.eject_valid & (events.eject_cls == 1)
-
-        # ---- 5. source injection (generation -> birth-stamped source queue)
-        phase = step_phase(profile, phase, k_phase)
-        rates = injection_rates(profile, ntype, phase)
-        gen = jax.random.bernoulli(k_gen, rates)  # (R,) new demand this cycle
-        gen = gen & ~is_mc
-        # push into the per-node source queue (drop + stall if full)
-        can_push = gen & (bl_count < BCAP)
-        tail = (bl_head + bl_count) % BCAP
-        tail = jnp.where(can_push, tail, BCAP)  # OOB -> dropped write
-        bl_birth = bl_birth.at[ar, tail].set(cyc_vec, mode="drop")
-        bl_count = bl_count + can_push.astype(jnp.int32)
-
-        can_inj = (bl_count > 0) & (outstanding < stc.mshr_limit) & ~is_mc
-        dests = jnp.take(
-            mc_ids, jax.random.randint(k_dest, (R,), 0, mc_ids.shape[0])
-        )
-        births = bl_birth[ar, bl_head]  # packet birth = generation
-        want_inj = (
-            (sub_ids[:, None] == req_sub[None, :])
-            & can_inj[None, :]
-            & sub_enabled[:, None]
-        )
-        new_subs, ok_inj = inject_subnets(
-            new_subs, ar, want_inj, dests, ar,
-            node_cls, births, cyc_vec, gpu_masks, cpu_masks,
-        )
-        inj_ok = jnp.any(ok_inj, axis=0)
-        bl_head = jnp.where(inj_ok, (bl_head + 1) % BCAP, bl_head)
-        bl_count = bl_count - inj_ok.astype(jnp.int32)
-        outstanding = outstanding + inj_ok.astype(jnp.int32)
-        backlog = (bl_birth, bl_head, bl_count)
-
-        # ---- 6. counters
-        gpu_blocked = is_gpu & (bl_count > 0)  # shader waiting on the ICNT
-        cnt = EpochCounters(
-            gpu_push=cnt.gpu_push + jnp.sum((inj_ok & is_gpu).astype(jnp.int32)),
-            gpu_stall_icnt=cnt.gpu_stall_icnt
-            + jnp.sum(gpu_blocked.astype(jnp.int32)),
-            gpu_stall_dram=cnt.gpu_stall_dram + jnp.sum(events.dram_block_gpu),
-            cpu_push=cnt.cpu_push + jnp.sum((inj_ok & is_cpu).astype(jnp.int32)),
-            gpu_done=cnt.gpu_done
-            + jnp.sum((rep_done & (rep_cls == 1)).astype(jnp.int32)),
-            cpu_done=cnt.cpu_done
-            + jnp.sum((rep_done & (rep_cls == 0)).astype(jnp.int32)),
-            gpu_gen=cnt.gpu_gen + jnp.sum((gen & is_gpu).astype(jnp.int32)),
-            cpu_gen=cnt.cpu_gen + jnp.sum((gen & is_cpu).astype(jnp.int32)),
-            lat_sum=cnt.lat_sum + jnp.sum(ej_lat),
-            lat_cnt=cnt.lat_cnt + jnp.sum(events.eject_valid.astype(jnp.int32)),
-            cpu_lat_sum=cnt.cpu_lat_sum
-            + jnp.sum(jnp.where(cpu_ej, ej_lat, 0)),
-            cpu_lat_cnt=cnt.cpu_lat_cnt + jnp.sum(cpu_ej.astype(jnp.int32)),
-            gpu_lat_sum=cnt.gpu_lat_sum
-            + jnp.sum(jnp.where(gpu_ej, ej_lat, 0)),
-            gpu_lat_cnt=cnt.gpu_lat_cnt + jnp.sum(gpu_ej.astype(jnp.int32)),
-            moved=cnt.moved + jnp.sum(events.moved),
-        )
-        return (
-            (new_subs, mc, phase, outstanding, backlog, cnt, policy, cycle + 1),
-            None,
-        )
 
     def epoch_body(carry, epoch_key):
-        subs, mc, phase, outst, backlog, policy, kf_state, cycle = carry
-        keys = jax.random.split(epoch_key, stc.epoch_len)
-        inner0 = (subs, mc, phase, outst, backlog, _zero_counters(), policy, cycle)
-        (subs, mc, phase, outst, backlog, cnt, policy, cycle), _ = jax.lax.scan(
-            cycle_body, inner0, keys
+        subs, mc, phase, outst, backlog, policy, kf_state, cycle0 = carry
+
+        # ---- epoch-invariant hoisting (DESIGN.md §11): `policy.config` is
+        # frozen until the KF acts at the epoch boundary, so the VC masks,
+        # the SA preference stream, the link-activation parity and ALL of
+        # the cycle RNG are computed here once and fed to the cycle scan as
+        # per-cycle `xs` instead of being recomputed every cycle.
+        config_idx = policy.config
+        g_vec, c_vec = class_vc_masks(mp, config_idx)          # (V,)
+        gpu_masks = jnp.broadcast_to(g_vec, (S, V))
+        cpu_masks = jnp.broadcast_to(c_vec, (S, V))
+
+        # Epoch prologue: replies staged on the previous epoch's last cycle
+        # inject under THIS epoch's masks.  The in-cycle merged inject is
+        # gated off on the epoch's last cycle (`rep_gate`), which preserves
+        # the original engine's ordering across a KF reconfiguration: a
+        # reply staged at cycle E-1 always entered the network with the
+        # *new* epoch's VC partition.
+        subs, ok0 = rt.inject_all(
+            subs, make_want_rep(mc), mc.stage_dst, ar,
+            mc.stage_cls, cycle0, gpu_masks, cpu_masks,
         )
+        mc = mc._replace(stage_valid=mc.stage_valid & ~jnp.any(ok0, axis=0))
+
+        # Per-epoch RNG streams: the SAME keys and draws as the old
+        # per-cycle `split(cycle_key, 3)` engine, batched with vmap (a
+        # value-preserving transform), so every stream is bitwise-identical
+        # to drawing inside the loop.
+        ep_len = stc.epoch_len
+        keys = jax.random.split(epoch_key, ep_len)
+        k3 = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
+        u_phase = jax.vmap(lambda k: jax.random.uniform(k, ()))(k3[:, 0])
+        u_gen = jax.vmap(
+            lambda k: jax.random.uniform(k, (R,), jnp.float32)
+        )(k3[:, 1])
+        d_idx = jax.vmap(
+            lambda k: jax.random.randint(k, (R,), 0, mc_ids.shape[0])
+        )(k3[:, 2])
+        dests_all = jnp.take(mc_ids, d_idx)                     # (L, R)
+        cycles = cycle0 + jnp.arange(ep_len, dtype=jnp.int32)
+        sa_all = epoch_sa_prefs(mp, config_idx, cycles)         # (L,)
+        # subnet link activation: full width (2-subnet) or alternating-cycle
+        # half width (4-subnet); padded subnet rows are never active.
+        alternating = (cycles[:, None] % 2) == (jnp.arange(S)[None, :] % 2)
+        active_all = sub_enabled[None, :] & jnp.where(fs, alternating, True)
+        rep_gate = jnp.arange(ep_len) < ep_len - 1
+        xs = (cycles, u_phase, u_gen, dests_all, sa_all, active_all, rep_gate)
+
+        def cycle_body(carry, x):
+            subs, mc, phase, outstanding, bl_count, cnt = carry
+            cycle, u_ph, u_gen_c, dests, sa_pref, active, gate = x
+
+            # MC acceptance applies to ejections on *request* subnets at MC
+            # nodes, judged on the queue depth BEFORE this cycle's service
+            # frees a slot.  With multiple request subnets (4-subnet mode)
+            # up to S/2 packets can arrive at one MC per cycle, so reserve
+            # that many slots.
+            mc_space = mc.count <= stc.mc_queue_cap - n_req_subs
+            can_accept = jnp.where(is_mc, mc_space, True)  # (R,)
+            accept_s = jnp.where(
+                sub_is_req[:, None], can_accept[None, :], True
+            )
+
+            # ---- 1. MC service: tick timers, move head request -> staging
+            can_serve = is_mc & (mc.count > 0) & ~mc.stage_valid
+            timer = jnp.where(
+                can_serve, jnp.maximum(mc.timer - 1, 0), mc.timer
+            )
+            done = can_serve & (timer == 0)
+            hq = mc.head[:, None]
+            q_head = jnp.take_along_axis(
+                mc.q_meta, hq, axis=1
+            )[:, 0].astype(jnp.int32)
+            # MC-queue meta is src | cls << META_SRC_SHIFT (router ids fit
+            # the shift width — asserted once in rt.device_tables)
+            src_out = q_head & ((1 << rt.META_SRC_SHIFT) - 1)
+            cls_out = q_head >> rt.META_SRC_SHIFT
+            mc = mc._replace(
+                head=jnp.where(
+                    done, (mc.head + 1) % stc.mc_queue_cap, mc.head
+                ),
+                count=mc.count - done.astype(jnp.int32),
+                timer=jnp.where(done, stc.mc_service_period, timer),
+                stage_valid=mc.stage_valid | done,
+                stage_dst=jnp.where(done, src_out, mc.stage_dst),
+                stage_cls=jnp.where(done, cls_out, mc.stage_cls),
+            )
+
+            # ---- 2. route/arbitrate every subnet
+            subs, events = rt.router_cycle(
+                subs, route_t, nb_t, opp_t,
+                gpu_masks, cpu_masks, sa_pref, accept_s, active,
+                arbitrate_fn=arb_fn,
+            )
+
+            # ---- 3. ejection handling
+            # request-subnet ejections at MC nodes -> enqueue into MC
+            # queues.  A per-subnet exclusive prefix count serializes
+            # same-MC arrivals into consecutive ring slots; the write is a
+            # dense masked where over (R, Q) (no scatter).
+            req_ej = (
+                events.eject_valid & sub_is_req[:, None] & is_mc[None, :]
+            )  # (S, R)
+            arr_i = req_ej.astype(jnp.int32)
+            slot_off = jnp.cumsum(arr_i, axis=0) - arr_i
+            slot = (
+                mc.head[None, :] + mc.count[None, :] + slot_off
+            ) % stc.mc_queue_cap
+            qmask = req_ej[..., None] & (
+                slot[..., None] == jnp.arange(stc.mc_queue_cap)
+            )  # (S, R, Q) — at most one subnet hits each slot
+            qhit = jnp.any(qmask, axis=0)
+            q_val = events.eject_src + (events.eject_cls << rt.META_SRC_SHIFT)
+            qm = jnp.sum(jnp.where(qmask, q_val[..., None], 0), axis=0)
+            mc = mc._replace(
+                q_meta=jnp.where(qhit, qm.astype(jnp.int8), mc.q_meta),
+                count=mc.count + jnp.sum(arr_i, axis=0),
+            )
+            # reply-subnet ejections at source nodes -> complete
+            # transactions (masked to live reply rows under S-padding)
+            rep_ej = (
+                events.eject_valid & sub_is_rep[:, None] & (~is_mc)[None, :]
+            )
+            rep_done = jnp.any(rep_ej, axis=0)
+            outstanding = outstanding - rep_done.astype(jnp.int32)
+            rep_cls = jnp.sum(jnp.where(rep_ej, events.eject_cls, 0), axis=0)
+
+            # Fig. 11 packet latency: network time (injection -> ejection).
+            # The subtraction runs in the stamp dtype — wraparound-exact
+            # for uint16 stamps because ages are < 2^16 by construction.
+            dt = events.eject_binj.dtype
+            age = (cycle.astype(dt) - events.eject_binj).astype(jnp.int32)
+            ej_lat = jnp.where(events.eject_valid, age, 0)
+            cpu_ej = events.eject_valid & (events.eject_cls == 0)
+            gpu_ej = events.eject_valid & (events.eject_cls == 1)
+
+            # ---- 4. source generation -> per-node source-queue depth
+            phase = step_phase_u(profile, phase, u_ph)
+            rates = injection_rates(profile, ntype, phase)
+            gen = (u_gen_c < rates) & ~is_mc  # == bernoulli(k_gen, rates)
+            # push into the per-node source queue (drop + stall if full)
+            can_push = gen & (bl_count < BCAP)
+            bl_count = bl_count + can_push.astype(jnp.int32)
+
+            can_inj = (
+                (bl_count > 0) & (outstanding < stc.mshr_limit) & ~is_mc
+            )
+
+            # ---- 5. ONE merged inject: this cycle's sources (request
+            # rows) + the replies staged this cycle (reply rows — the old
+            # engine injected those at the TOP of the next cycle; nothing
+            # between the two points touches reply-row state, so fusing
+            # them here is value-identical; `gate` defers the epoch's last
+            # cycle to the next epoch's prologue).
+            want_src = (
+                (sub_ids[:, None] == req_sub[None, :])
+                & can_inj[None, :]
+                & sub_enabled[:, None]
+            )
+            want_rep = make_want_rep(mc) & gate
+            is_req_row = sub_is_req[:, None]
+            subs, ok = rt.inject_all(
+                subs, want_src | want_rep,
+                jnp.where(is_req_row, dests[None, :], mc.stage_dst[None, :]),
+                jnp.broadcast_to(ar, (S, R)),
+                jnp.where(
+                    is_req_row, node_cls[None, :], mc.stage_cls[None, :]
+                ),
+                jnp.where(is_req_row, cycle, cycle + 1),
+                gpu_masks, cpu_masks,
+            )
+            inj_ok = jnp.any(ok & is_req_row, axis=0)
+            mc = mc._replace(
+                stage_valid=mc.stage_valid
+                & ~jnp.any(ok & ~is_req_row, axis=0)
+            )
+            bl_count = bl_count - inj_ok.astype(jnp.int32)
+            outstanding = outstanding + inj_ok.astype(jnp.int32)
+
+            # ---- 6. counters
+            gpu_blocked = is_gpu & (bl_count > 0)  # shader stuck at ICNT
+            cnt = EpochCounters(
+                gpu_push=cnt.gpu_push
+                + jnp.sum((inj_ok & is_gpu).astype(jnp.int32)),
+                gpu_stall_icnt=cnt.gpu_stall_icnt
+                + jnp.sum(gpu_blocked.astype(jnp.int32)),
+                gpu_stall_dram=cnt.gpu_stall_dram + events.dram_block_gpu,
+                cpu_push=cnt.cpu_push
+                + jnp.sum((inj_ok & is_cpu).astype(jnp.int32)),
+                gpu_done=cnt.gpu_done
+                + jnp.sum((rep_done & (rep_cls == 1)).astype(jnp.int32)),
+                cpu_done=cnt.cpu_done
+                + jnp.sum((rep_done & (rep_cls == 0)).astype(jnp.int32)),
+                gpu_gen=cnt.gpu_gen + jnp.sum((gen & is_gpu).astype(jnp.int32)),
+                cpu_gen=cnt.cpu_gen + jnp.sum((gen & is_cpu).astype(jnp.int32)),
+                lat_sum=cnt.lat_sum + jnp.sum(ej_lat),
+                lat_cnt=cnt.lat_cnt
+                + jnp.sum(events.eject_valid.astype(jnp.int32)),
+                cpu_lat_sum=cnt.cpu_lat_sum
+                + jnp.sum(jnp.where(cpu_ej, ej_lat, 0)),
+                cpu_lat_cnt=cnt.cpu_lat_cnt
+                + jnp.sum(cpu_ej.astype(jnp.int32)),
+                gpu_lat_sum=cnt.gpu_lat_sum
+                + jnp.sum(jnp.where(gpu_ej, ej_lat, 0)),
+                gpu_lat_cnt=cnt.gpu_lat_cnt
+                + jnp.sum(gpu_ej.astype(jnp.int32)),
+                moved=cnt.moved + events.moved,
+            )
+            return (subs, mc, phase, outstanding, bl_count, cnt), None
+
+        inner0 = (subs, mc, phase, outst, backlog, _zero_counters())
+        (subs, mc, phase, outst, backlog, cnt), _ = jax.lax.scan(
+            cycle_body, inner0, xs, unroll=stc.cycle_unroll
+        )
+        cycle = cycle0 + jnp.int32(stc.epoch_len)
 
         # ---- KF epoch update (paper §3.2)
         raw = jnp.stack(
@@ -512,7 +587,8 @@ def _simulate_impl(
         inj_rate = (cnt.gpu_push.astype(jnp.float32)
                     / (stc.epoch_len * jnp.sum(is_gpu)))
 
-        out = (gpu_ipc, cpu_ipc, avg_lat, signal, policy.config, cnt, inj_rate)
+        out = (gpu_ipc, cpu_ipc, avg_lat, signal, policy.config, cnt, inj_rate,
+               jnp.sum(g_vec.astype(jnp.int32)))
         return (subs, mc, phase, outst, backlog, policy, kf_state, cycle), out
 
     key0 = jax.random.PRNGKey(seed)
@@ -527,7 +603,7 @@ def _simulate_impl(
         kalman.init_state(1),
         jnp.int32(0),
     )
-    _, (gpu_ipc, cpu_ipc, avg_lat, sig, conf, cnt, inj) = jax.lax.scan(
+    _, (gpu_ipc, cpu_ipc, avg_lat, sig, conf, cnt, inj, quota) = jax.lax.scan(
         epoch_body, carry0, epoch_keys
     )
     return SimResult(
@@ -538,6 +614,7 @@ def _simulate_impl(
         applied_config=conf,
         counters=cnt,
         gpu_inj_rate=inj,
+        gpu_vc_quota=quota,
     )
 
 
@@ -567,15 +644,21 @@ def _batch_jit():
 
 
 def simulate(
-    cfg: NoCConfig, profile: WorkloadProfile, padded: bool = True
+    cfg: NoCConfig, profile: WorkloadProfile, padded: bool = True,
+    backend: str | None = None,
 ) -> SimResult:
     """Run one configuration (compiles at most once per `SimStatic`).
 
     With ``padded=True`` (default) every mode runs the shared S/V-padded
     program; ``padded=False`` compiles the mode's dedicated trace, kept so
     the equivalence tests can pin padded == dedicated bit-for-bit.
+    ``backend`` overrides the config's arbitration backend ("ref" | "pallas",
+    see DESIGN.md §11); each backend is its own `SimStatic`, so opting into
+    the Pallas path never perturbs the default program's trace count.
     """
     stc = cfg.static_spec(padded)
+    if backend is not None:
+        stc = dataclasses.replace(stc, backend=backend)
     return _SIM_JIT(
         stc,
         cfg.mode_policy(padded),

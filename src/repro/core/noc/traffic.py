@@ -88,12 +88,21 @@ def init_phase() -> Array:
     return jnp.int32(0)
 
 
-def step_phase(profile: WorkloadProfile, phase: Array, key: Array) -> Array:
-    """Advance the global Markov burst phase by one cycle."""
-    u = jax.random.uniform(key, ())
+def step_phase_u(profile: WorkloadProfile, phase: Array, u: Array) -> Array:
+    """Advance the global Markov burst phase given a pre-drawn uniform `u`.
+
+    The cycle engine precomputes its whole epoch's uniforms in one batched
+    draw (DESIGN.md §11); `u` here must be `jax.random.uniform(key, ())` for
+    the cycle's key so the split is value-identical to drawing in the loop.
+    """
     enter = (phase == 0) & (u < profile.p_enter)
     exit_ = (phase == 1) & (u < profile.p_exit)
     return jnp.where(enter, 1, jnp.where(exit_, 0, phase)).astype(jnp.int32)
+
+
+def step_phase(profile: WorkloadProfile, phase: Array, key: Array) -> Array:
+    """Advance the global Markov burst phase by one cycle."""
+    return step_phase_u(profile, phase, jax.random.uniform(key, ()))
 
 
 def injection_rates(

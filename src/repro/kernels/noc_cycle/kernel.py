@@ -1,0 +1,160 @@
+"""Pallas TPU kernel: the NoC router-arbitration inner loop over lanes.
+
+One simulated cycle's switch allocation — VC allocation at the downstream
+router, per-output round-robin arbitration, and the one-traversal-per-input
+grant filter — for EVERY (subnet, router) pair at once.  The pairs ride the
+128-wide TPU lanes as a flattened `(S*R)` lane axis (batched sweeps flatten
+`(B*S*R)`), and the small microarchitectural axes (P*V requesters, O output
+ports, V virtual channels) ride sublanes with the port/VC loops unrolled at
+trace time — every op in the kernel is a 2D (sublane, lane) VPU op.
+
+This is the jax_pallas-facing half of the cycle engine (DESIGN.md §11): the
+dense-jnp `router.arbitrate` is the oracle, `ops.arbitrate_lanes` is the
+`simulate(..., backend="pallas")` entry with interpret-mode fallback off-TPU,
+and the two must agree BITWISE — the packed-min trick, the argmax-of-bool VC
+pick and the garbage-when-ungranted conventions are all mirrored exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1 << 20
+
+
+def _noc_cycle_kernel(
+    valid_ref, cls_ref, out_port_ref, rr_ref, down_ref, exists_ref,
+    gmask_ref, cmask_ref, sa_ref, accept_ref, active_ref,
+    grant_ref, winner_ref, down_vc_ref, deq_ref, new_rr_ref,
+    any_req_ref, w_cls_ref,
+    *,
+    depth: int,
+):
+    PV, _ = valid_ref.shape          # requesters (P*V) x lane block
+    O = rr_ref.shape[0]              # output ports
+    V = gmask_ref.shape[0]           # virtual channels
+    P = PV // V                      # input ports (== O on a crossbar)
+    local = O - 1                    # PORT_L is the last port by convention
+
+    valid = valid_ref[...] != 0
+    cls = cls_ref[...]
+    op = out_port_ref[...]
+    sa = sa_ref[...]                                   # (1, L)
+    accept = accept_ref[...] != 0
+    active = active_ref[...] != 0
+    gmask = gmask_ref[...] != 0                        # (V, L)
+    cmask = cmask_ref[...] != 0
+
+    pv_iota = jax.lax.broadcasted_iota(jnp.int32, valid.shape, 0)
+    v_iota = jax.lax.broadcasted_iota(jnp.int32, gmask.shape, 0)
+    is_pref = (cls == sa) | (sa < 0)
+    penalty = jnp.where(is_pref, 0, PV)                # (PV, L)
+
+    grants, winners, down_vcs, new_rrs = [], [], [], []
+    any_reqs, w_clss, w_ports, sel_ohs = [], [], [], []
+    for o in range(O):
+        req_o = valid & (op == o)                      # (PV, L)
+        rr_o = rr_ref[o:o + 1, :]                      # (1, L)
+        key = (pv_iota - rr_o) % PV + penalty
+        # the empty-column sentinel must be a multiple of PV so the garbage
+        # winner (% PV) is 0, exactly like the reference's packed min
+        packed = jnp.where(req_o, key * PV + pv_iota, PV * (1 << 14))
+        win_o = jnp.min(packed, axis=0, keepdims=True) % PV
+        any_o = jnp.any(req_o, axis=0, keepdims=True)
+        sel_o = pv_iota == win_o                       # (PV, L) one-hot
+        wcls_o = jnp.sum(jnp.where(sel_o, cls, 0), axis=0, keepdims=True)
+
+        allowed = jnp.where(wcls_o == 1, gmask, cmask)  # (V, L)
+        dc_o = down_ref[o * V:(o + 1) * V, :]           # (V, L)
+        has = (dc_o < depth) & allowed
+        credit_o = jnp.any(has, axis=0, keepdims=True)
+        first_vc = jnp.min(jnp.where(has, v_iota, V), axis=0, keepdims=True)
+        down_vc_o = jnp.where(credit_o, first_vc, 0)   # argmax-of-bool conv.
+
+        if o == local:
+            grant_o = any_o & accept & active
+        else:
+            exists_o = exists_ref[o:o + 1, :] != 0
+            grant_o = any_o & exists_o & credit_o & active
+
+        grants.append(grant_o)
+        winners.append(win_o)
+        down_vcs.append(down_vc_o)
+        any_reqs.append(any_o)
+        w_clss.append(wcls_o)
+        w_ports.append(win_o // V)
+        sel_ohs.append(sel_o)
+        new_rrs.append((win_o + 1) % PV)
+
+    # one traversal per input port: keep the lowest-output grant per port
+    ranks = [jnp.where(grants[o], o, BIG) for o in range(O)]
+    min_rank = []
+    for p in range(P):
+        mr = jnp.full_like(ranks[0], BIG)
+        for o in range(O):
+            mr = jnp.minimum(mr, jnp.where(w_ports[o] == p, ranks[o], BIG))
+        min_rank.append(mr)
+    deq = jnp.zeros(valid.shape, jnp.int32)
+    for o in range(O):
+        sel_rank = jnp.zeros_like(ranks[o])
+        for p in range(P):
+            sel_rank = sel_rank + jnp.where(w_ports[o] == p, min_rank[p], 0)
+        grants[o] = grants[o] & (ranks[o] == sel_rank)
+        deq = deq | (sel_ohs[o] & grants[o]).astype(jnp.int32)
+        new_rrs[o] = jnp.where(grants[o], new_rrs[o], rr_ref[o:o + 1, :])
+
+    grant_ref[...] = jnp.concatenate(grants, axis=0).astype(jnp.int32)
+    winner_ref[...] = jnp.concatenate(winners, axis=0)
+    down_vc_ref[...] = jnp.concatenate(down_vcs, axis=0)
+    deq_ref[...] = deq
+    new_rr_ref[...] = jnp.concatenate(new_rrs, axis=0)
+    any_req_ref[...] = jnp.concatenate(any_reqs, axis=0).astype(jnp.int32)
+    w_cls_ref[...] = jnp.concatenate(w_clss, axis=0)
+
+
+def noc_cycle_kernel(
+    valid: jax.Array,       # (PV, L) int32 0/1
+    cls: jax.Array,         # (PV, L) int32
+    out_port: jax.Array,    # (PV, L) int32
+    rr_ptr: jax.Array,      # (O, L) int32
+    down_count: jax.Array,  # (O*V, L) int32
+    down_exists: jax.Array,  # (O, L) int32 0/1
+    gmask: jax.Array,       # (V, L) int32 0/1
+    cmask: jax.Array,       # (V, L) int32 0/1
+    sa_pref: jax.Array,     # (1, L) int32
+    accept: jax.Array,      # (1, L) int32 0/1
+    active: jax.Array,      # (1, L) int32 0/1
+    *,
+    depth: int,
+    n_vcs: int,
+    block_l: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, ...]:
+    """Lane-blocked dispatch; L must be a multiple of `block_l`."""
+    pv, lanes = valid.shape
+    o = rr_ptr.shape[0]
+    assert lanes % block_l == 0, (lanes, block_l)
+    grid = (lanes // block_l,)
+
+    def spec(rows):
+        return pl.BlockSpec((rows, block_l), lambda i: (0, i))
+
+    out_rows = [o, o, o, pv, o, o, o]
+    kernel = functools.partial(_noc_cycle_kernel, depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            spec(pv), spec(pv), spec(pv), spec(o), spec(o * n_vcs),
+            spec(o), spec(n_vcs), spec(n_vcs), spec(1), spec(1), spec(1),
+        ],
+        out_specs=[spec(r) for r in out_rows],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, lanes), jnp.int32) for r in out_rows
+        ],
+        interpret=interpret,
+    )(valid, cls, out_port, rr_ptr, down_count, down_exists,
+      gmask, cmask, sa_pref, accept, active)

@@ -1,0 +1,15 @@
+"""Oracle for the noc_cycle kernel: the production dense-jnp switch
+allocator from `repro.core.noc.router`.
+
+`router.arbitrate` IS the reference — the simulator's default backend runs
+it directly, and the Pallas lane kernel in `kernel.py` must agree with it
+bitwise on every output (grant/winner/down_vc/deq/new_rr/any_req/w_cls);
+tests/test_cycle_engine.py pins that on random router states and on a full
+`router_cycle` step."""
+from __future__ import annotations
+
+from repro.core.noc.router import Arbitration, arbitrate
+
+noc_cycle_ref = arbitrate
+
+__all__ = ["Arbitration", "noc_cycle_ref"]

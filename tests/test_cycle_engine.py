@@ -1,0 +1,302 @@
+"""Cycle-engine equivalence suite (DESIGN.md §11).
+
+The packed-lane engine rewrote the hot loop under a bitwise contract: every
+rewrite (epoch-hoisted masks, precomputed RNG streams, the merged inject,
+packed narrow-dtype state, the scatter-free dense writes, the Pallas
+arbitration kernel) must leave all observable outputs exactly as the PR-3
+engine produced them.  Three layers of pinning:
+
+  1. golden outputs — `tests/golden_cycle_engine.json` was captured from the
+     PR-3 padded program; the new engine must reproduce it bit-for-bit;
+  2. rewrite micro-tests — each equivalence-preserving rewrite is checked
+     directly against the formulation it replaced;
+  3. ref <-> Pallas congruence — `kernels.noc_cycle` (interpret mode off
+     TPU) must agree with `router.arbitrate` exactly, from a single
+     arbitration step up to a whole `simulate(backend="pallas")` run.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.allocator import PolicyConfig
+from repro.core.noc import router as rt
+from repro.core.noc import sim
+from repro.core.noc.sim import NoCConfig
+from repro.core.noc.topology import N_PORTS, make_topology
+from repro.core.noc.traffic import PROFILES
+
+FAST = dict(n_epochs=8, epoch_len=100)
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(__file__), "golden_cycle_engine.json"
+)
+
+
+# ---------------------------------------------------------------------------
+# 1. golden pinning vs the PR-3 engine
+# ---------------------------------------------------------------------------
+
+def test_outputs_match_pr3_golden_capture():
+    """Counters/config/latency match the pre-rewrite padded program exactly.
+
+    The golden file was captured from the PR-3 engine (per-cycle RNG
+    splits, separate injects, int32 scatter state) before this refactor
+    landed; equality here proves the whole rewrite chain is value-preserving,
+    not just self-consistent.
+    """
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    for key, g in golden.items():
+        mode, wl, gs, ss = key.split("/")
+        cfg = NoCConfig(mode=mode, static_gpu_vcs=int(gs[1:]),
+                        seed=int(ss[1:]), **FAST)
+        res = sim.simulate(cfg, PROFILES[wl])
+        sums = {n: int(np.sum(np.asarray(leaf)))
+                for n, leaf in zip(res.counters._fields, res.counters)}
+        assert sums == g["counter_sums"], f"{key}: counter drift"
+        assert np.asarray(res.applied_config).tolist() == g["applied_config"]
+        assert np.asarray(res.kf_signal).tolist() == g["kf_signal"]
+        np.testing.assert_allclose(
+            float(np.asarray(res.avg_latency)[-1]), g["avg_latency_last"],
+            rtol=0, atol=1e-6, err_msg=key,
+        )
+
+
+# ---------------------------------------------------------------------------
+# 2. rewrite micro-tests
+# ---------------------------------------------------------------------------
+
+def test_batched_rng_streams_match_per_cycle_splits():
+    """The per-epoch vmapped RNG precompute == the old per-cycle splits."""
+    epoch_key = jax.random.PRNGKey(42)
+    ep_len, R, n_mc = 37, 36, 8
+    keys = jax.random.split(epoch_key, ep_len)
+
+    # old engine: draw inside the loop, one cycle at a time
+    u_ph_ref, u_gen_ref, d_ref = [], [], []
+    for i in range(ep_len):
+        k_phase, k_gen, k_dest = jax.random.split(keys[i], 3)
+        u_ph_ref.append(jax.random.uniform(k_phase, ()))
+        u_gen_ref.append(jax.random.uniform(k_gen, (R,), jnp.float32))
+        d_ref.append(jax.random.randint(k_dest, (R,), 0, n_mc))
+
+    # new engine: one batched draw per epoch (sim.epoch_body's precompute)
+    k3 = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
+    u_phase = jax.vmap(lambda k: jax.random.uniform(k, ()))(k3[:, 0])
+    u_gen = jax.vmap(
+        lambda k: jax.random.uniform(k, (R,), jnp.float32)
+    )(k3[:, 1])
+    d_idx = jax.vmap(
+        lambda k: jax.random.randint(k, (R,), 0, n_mc)
+    )(k3[:, 2])
+
+    np.testing.assert_array_equal(np.asarray(u_phase), np.stack(u_ph_ref))
+    np.testing.assert_array_equal(np.asarray(u_gen), np.stack(u_gen_ref))
+    np.testing.assert_array_equal(np.asarray(d_idx), np.stack(d_ref))
+
+
+def _random_subnet_state(rng, S=4, R=36, P=N_PORTS, V=4, B=4):
+    dest = rng.integers(0, R, (S, R, P, V, B))
+    src = rng.integers(0, R, (S, R, P, V, B))
+    cls = rng.integers(0, 2, (S, R, P, V, B))
+    return rt.SubnetState(
+        buf_meta=jnp.asarray(
+            dest + (src << rt.META_SRC_SHIFT) + (cls << rt.META_CLS_SHIFT),
+            jnp.int16,
+        ),
+        buf_binj=jnp.asarray(
+            rng.integers(0, 5000, (S, R, P, V, B)), jnp.uint16
+        ),
+        head=jnp.asarray(rng.integers(0, B, (S, R, P, V)), jnp.int8),
+        count=jnp.asarray(rng.integers(0, B + 1, (S, R, P, V)), jnp.int8),
+        rr_ptr=jnp.asarray(rng.integers(0, P * V, (S, R, P)), jnp.int8),
+    )
+
+
+def _states_equal(a, b):
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=f"state leaf {name}"
+        )
+
+
+def test_merged_inject_equals_separate_injects():
+    """One inject over the union want-matrix == two per-kind injects.
+
+    The cycle engine fuses the MC-reply and source injections into one
+    `inject_all` pass; they target disjoint subnet rows, so the merged call
+    must be exactly the composition of the separate ones.
+    """
+    rng = np.random.default_rng(7)
+    S, R, V = 4, 36, 4
+    state = _random_subnet_state(rng)
+    sub_is_req = jnp.asarray([True, False, True, False])
+
+    want_src = jnp.asarray(rng.random((S, R)) < 0.5) & sub_is_req[:, None]
+    want_rep = jnp.asarray(rng.random((S, R)) < 0.5) & ~sub_is_req[:, None]
+    dest = jnp.asarray(rng.integers(0, R, (S, R)), jnp.int32)
+    src = jnp.asarray(rng.integers(0, R, (S, R)), jnp.int32)
+    cls = jnp.asarray(rng.integers(0, 2, (S, R)), jnp.int32)
+    binj = jnp.asarray(rng.integers(0, 5000, (S, R)), jnp.int32)
+    gmask = jnp.asarray(rng.random((S, V)) < 0.7)
+    cmask = jnp.asarray(rng.random((S, V)) < 0.7)
+
+    merged, ok_m = rt.inject_all(
+        state, want_src | want_rep, dest, src, cls, binj, gmask, cmask
+    )
+    step1, ok_rep = rt.inject_all(
+        state, want_rep, dest, src, cls, binj, gmask, cmask
+    )
+    sep, ok_src = rt.inject_all(
+        step1, want_src, dest, src, cls, binj, gmask, cmask
+    )
+    _states_equal(merged, sep)
+    np.testing.assert_array_equal(np.asarray(ok_m), np.asarray(ok_rep | ok_src))
+
+
+def test_packed_state_roundtrips_and_wrap_exact_latency():
+    """Packed vs int32 state: every field a packet can carry survives the
+    int16 meta pack exactly, and the uint16 injection stamps give the same
+    latency as int32 arithmetic for every age the engine can produce."""
+    R = make_topology().n_routers
+    dest, src, cls = np.meshgrid(
+        np.arange(R), np.arange(R), np.arange(2), indexing="ij"
+    )
+    d, s, c = (jnp.asarray(x.ravel(), jnp.int32) for x in (dest, src, cls))
+    meta = rt.pack_meta(d, s, c)
+    assert meta.dtype == jnp.int16
+    d2, s2, c2 = rt.unpack_meta(meta)
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(d))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s))
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(c))
+
+    # wraparound-exact uint16 age: (cycle - binj) mod 2^16 == true age
+    total = 60_001  # default paper run: 120 epochs x 500 cycles (+1 stamp)
+    binj = jnp.asarray([0, 1, 40_000, 60_000, 65_000], jnp.uint16)
+    cycle = jnp.int32(total - 1)
+    age16 = (cycle.astype(jnp.uint16) - binj).astype(jnp.int32)
+    true_age = cycle - jnp.asarray([0, 1, 40_000, 60_000, 65_000], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(age16)[true_age >= 0], np.asarray(true_age)[true_age >= 0]
+    )
+
+
+def test_policy_boundary_masks_flip_exactly_one_epoch_after_config():
+    """Guard the epoch-level mask hoisting against an off-by-one epoch.
+
+    `apply_policy_gated` runs at the END of epoch e, so the masks applied
+    DURING epoch e must reflect `applied_config[e-1]` — never `[e]` (that
+    would mean the hoist reads the config too early) and never `[e-2]`
+    (stale by one).  `gpu_vc_quota` reports the hoisted mask the epoch
+    actually used; with warmup/hold disabled the KF toggles mid-run.
+    """
+    cfg = NoCConfig(mode="kf", n_epochs=15, epoch_len=300, seed=1,
+                    policy=PolicyConfig(warmup=0, hold=0, revert=10**9))
+    res = sim.simulate(cfg, PROFILES["BFS"])
+    conf = np.asarray(res.applied_config)
+    quota = np.asarray(res.gpu_vc_quota)
+    assert (np.diff(conf) != 0).any(), "scenario no longer toggles the KF"
+    # kf-mode partitions: config 0 -> GPU {0,1} (2 VCs), config 1 -> 3 VCs
+    used_config = np.concatenate([[0], conf[:-1]])
+    np.testing.assert_array_equal(quota, np.where(used_config > 0, 3, 2))
+
+
+# ---------------------------------------------------------------------------
+# 3. ref <-> Pallas congruence (interpret mode off-TPU)
+# ---------------------------------------------------------------------------
+
+def _random_arbitrate_inputs(rng, lead, P=N_PORTS, V=4, B=4):
+    PV = P * V
+    gm = jnp.asarray(rng.random(lead[:-1] + (1, V)) < 0.7)
+    cm = jnp.asarray(rng.random(lead[:-1] + (1, V)) < 0.7)
+    return dict(
+        valid=jnp.asarray(rng.random(lead + (PV,)) < 0.5),
+        cls=jnp.asarray(rng.integers(0, 2, lead + (PV,)), jnp.int32),
+        out_port=jnp.asarray(rng.integers(0, P, lead + (PV,)), jnp.int32),
+        rr_ptr=jnp.asarray(rng.integers(0, PV, lead + (P,)), jnp.int32),
+        down_count=jnp.asarray(
+            rng.integers(0, B + 1, lead + (P, V)), jnp.int32
+        ),
+        down_exists=jnp.asarray(rng.random(lead + (P,)) < 0.8),
+        gpu_vc_mask=jnp.broadcast_to(gm, lead + (V,)),
+        cpu_vc_mask=jnp.broadcast_to(cm, lead + (V,)),
+        sa_pref=jnp.asarray(rng.integers(-1, 2, lead), jnp.int32),
+        accept=jnp.asarray(rng.random(lead) < 0.7),
+        active=jnp.asarray(rng.random(lead) < 0.9),
+    )
+
+
+def test_noc_cycle_kernel_matches_ref_on_random_states():
+    """Every `Arbitration` output agrees exactly — including the ragged
+    lane tail (S*R = 144 pads up to the 256-lane grid)."""
+    from repro.kernels.noc_cycle.ops import arbitrate_lanes
+    from repro.kernels.noc_cycle.ref import noc_cycle_ref
+
+    rng = np.random.default_rng(3)
+    for lead in [(4, 36), (2, 36), (1, 7)]:
+        inp = _random_arbitrate_inputs(rng, lead)
+        ref = noc_cycle_ref(**inp, depth=4)
+        ker = arbitrate_lanes(**inp, depth=4)
+        for name, a, b in zip(ref._fields, ref, ker):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"lead={lead}: arbitration output {name}",
+            )
+
+
+def test_noc_cycle_kernel_matches_ref_on_full_router_cycle():
+    """A whole `router_cycle` step (peek -> arbitrate -> dequeue/traverse)
+    agrees exactly between the ref and Pallas arbitration backends."""
+    from repro.kernels.noc_cycle.ops import arbitrate_lanes
+
+    rng = np.random.default_rng(11)
+    topo = make_topology()
+    route_t, nb_t, opp_t, ntype, _ = rt.device_tables(topo)
+    S, V = 4, 4
+    state = _random_subnet_state(rng)
+    gmask = jnp.asarray(rng.random((S, V)) < 0.7)
+    cmask = jnp.asarray(rng.random((S, V)) < 0.7)
+    sa = jnp.int32(1)
+    accept = jnp.asarray(rng.random((S, topo.n_routers)) < 0.8)
+    active = jnp.asarray([True, True, False, True])
+
+    ref_state, ref_ev = rt.router_cycle(
+        state, route_t, nb_t, opp_t, gmask, cmask, sa, accept, active
+    )
+    pal_state, pal_ev = rt.router_cycle(
+        state, route_t, nb_t, opp_t, gmask, cmask, sa, accept, active,
+        arbitrate_fn=arbitrate_lanes,
+    )
+    _states_equal(ref_state, pal_state)
+    for name, a, b in zip(ref_ev._fields, ref_ev, pal_ev):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"event {name}"
+        )
+
+
+def test_simulate_pallas_backend_runs_fig2_3_smoke():
+    """`simulate(..., backend="pallas")` runs a Fig. 2/3 grid point end to
+    end and reproduces the default backend bit-for-bit (the backend is its
+    own `SimStatic`, so this never disturbs the paper sweep's single
+    compiled program)."""
+    tiny = dict(n_epochs=2, epoch_len=40)
+    cfg = NoCConfig(mode="static", static_gpu_vcs=3, **tiny)
+    ref = sim.simulate(cfg, PROFILES["PATH"])
+    pal = sim.simulate(cfg, PROFILES["PATH"], backend="pallas")
+    for (path, a), (_, b) in zip(
+        jax.tree_util.tree_leaves_with_path(ref),
+        jax.tree_util.tree_leaves_with_path(pal),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"leaf {jax.tree_util.keystr(path)}",
+        )
+
+
+def test_unknown_backend_rejected():
+    cfg = NoCConfig(mode="baseline", n_epochs=1, epoch_len=10)
+    with pytest.raises(ValueError, match="backend"):
+        sim.simulate(cfg, PROFILES["PATH"], backend="cuda")
