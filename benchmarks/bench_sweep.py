@@ -32,7 +32,7 @@ import jax
 import numpy as np
 
 from repro.core.noc import sim
-from repro.core.noc.traffic import PROFILES
+from repro.core.noc.traffic import PROFILES, materialize
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_noc.json")
 
@@ -82,7 +82,8 @@ def time_serial_seed_style(cfgs, profs) -> float:
     for cfg, prof in zip(cfgs, profs):
         fresh = _fresh_jit(sim._simulate_impl)
         stc = cfg.static_spec(padded=False)
-        _block(fresh(stc, cfg.mode_policy(padded=False), prof, cfg.seed,
+        _block(fresh(stc, cfg.mode_policy(padded=False),
+                     materialize(prof, stc.n_epochs), cfg.seed,
                      sim.init_sim_state(stc)))
     return time.perf_counter() - t0
 

@@ -1,0 +1,201 @@
+"""Paper Figs. 9/10 predictor ablation: KF vs naive predictors, across the
+scenario library (DESIGN.md §12).
+
+The paper's central claim is that the *Kalman Filter's prediction quality*
+— not merely "having a reconfiguration knob" — is what lets the network
+follow traffic changes without thrashing.  This benchmark reproduces that
+comparison: the same hysteresis machine (mode="kf") is driven by each
+member of the predictor bank (KF / EMA / last-value / always-on /
+always-off) over non-stationary scenario schedules (workload phase shift,
+rate ramp, multi-program mix, deterministic burst train), and every
+(scenario x predictor x seed) point runs through `sim.sweep` — predictor
+and scenario are both traced data, so the whole grid shares the simulator's
+ONE compiled program (`--gate` asserts it).
+
+Gate (paper Fig. 9/10 qualitative ordering): on the phase-shift scenario
+the KF's mean GPU IPC must be >= every naive predictor's.  Non-smoke runs
+append a `noc_ablation` record to BENCH_noc.json, which
+`benchmarks/check_bench.py` then tolerates-until-present and gates on.
+
+    PYTHONPATH=src python -m benchmarks.fig_ablation [--smoke] [--gate]
+                                                     [--devices N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+
+import jax
+
+from repro.core.allocator import PolicyConfig
+from repro.core.noc import sim
+from repro.core.noc.sim import SweepSpec, summarize_seeds, sweep
+
+PREDICTORS = ("kf", "ema", "last", "always_on", "always_off")
+SCENARIO_SET = (
+    "SHIFT_PATH_BFS", "RAMP_LIB", "MIX_PATH_STO_BFS", "BURSTS_BFS",
+)
+# the acceptance scenario: KF >= every naive predictor on mean GPU IPC here
+GATE_SCENARIO = "SHIFT_PATH_BFS"
+SEEDS = (0, 1, 2)
+
+# Process-noise tuning for the ablation's KF (every predictor is
+# parameterized for the scenario suite's timescale: EMA runs the textbook
+# α=0.5, the KF a q matched to the ~30-epoch kernel arcs).  q=2e-2 gives an
+# effective per-epoch gain of ~0.4: the posterior still rides a one-epoch
+# inter-kernel dip (x ≈ 1 - 0.4*2 > 0) but releases within ~3 calm epochs,
+# so the revert budget resets every arc instead of firing mid-burst the way
+# the fig-12 default q=1e-3 (tuned to the free-Markov workloads' multi-
+# thousand-cycle dwell times, release ~10 epochs) does on fast arcs.  The
+# default-path goldens are untouched (kf_q is a SimStatic field, so this
+# override compiles its own spec — shared by EVERY ablation point, keeping
+# the grid at one trace — and never perturbs the default program).
+KF_Q_ABLATION = 2e-2
+
+# Smoke trims SEEDS and SCENARIOS, not the simulated dims: the gate
+# scenario's observational structure is cycle-calibrated (the burst
+# backlog takes ~1 epoch_len=500 to drain, which is what hides the dip's
+# first epoch), so shrinking epoch_len or n_epochs erases the very dip the
+# ablation discriminates on.  The pinned arcs make runs near-deterministic
+# (cross-seed std ~0.001 vs gate margins ~0.005-0.015), so one seed on the
+# gate scenario is a faithful CI-scale check.
+SMOKE = dict(seeds=(0,), scenarios=(GATE_SCENARIO,))
+
+
+def run(
+    n_epochs: int = 120,
+    seeds: tuple[int, ...] = SEEDS,
+    scenarios: tuple[str, ...] = SCENARIO_SET,
+    devices: int | None = None,
+    **overrides,
+) -> dict:
+    """Sweep predictors x scenarios x seeds; summarize per cell.
+
+    Means are taken from the first epoch the hysteresis machine may act
+    (warmup/epoch_len), so always-off's head start on config 0 epochs does
+    not dilute the comparison window.
+    """
+    overrides.setdefault("kf_q", KF_Q_ABLATION)
+    specs = [
+        SweepSpec("kf", sc, seed=s, predictor=p)
+        for sc in scenarios for p in PREDICTORS for s in seeds
+    ]
+    sim.reset_trace_count()
+    rows = sweep(specs, n_epochs=n_epochs, devices=devices, **overrides)
+    traces = sim.trace_count()
+    policy = overrides.get("policy", PolicyConfig())
+    epoch_len = overrides.get("epoch_len", 500)
+    warmup_epochs = min(math.ceil(policy.warmup / epoch_len), n_epochs - 1)
+    by_cell: dict[tuple[str, str], list] = {}
+    for sp, row in zip(specs, rows):
+        by_cell.setdefault((sp.workload, sp.predictor), []).append(row)
+    table = {
+        sc: {
+            p: summarize_seeds(by_cell[(sc, p)], warmup_epochs=warmup_epochs)
+            for p in PREDICTORS
+        }
+        for sc in scenarios
+    }
+    return {"table": table, "traces": traces, "warmup_epochs": warmup_epochs}
+
+
+def kf_verdict(table: dict, scenario: str = GATE_SCENARIO) -> dict:
+    """KF-vs-naive margins on the gate scenario's mean GPU IPC.
+
+    The verdict compares UNROUNDED margins (rounding only the reported
+    values): a sub-rounding-quantum KF loss must still fail the gate.
+    """
+    cells = table[scenario]
+    kf = cells["kf"]["gpu_ipc"]
+    margins = {p: kf - cells[p]["gpu_ipc"] for p in PREDICTORS if p != "kf"}
+    return {
+        "scenario": scenario,
+        "kf_gpu_ipc": round(kf, 6),
+        "margins": {p: round(m, 6) for p, m in margins.items()},
+        "kf_beats_all": all(m >= 0.0 for m in margins.values()),
+    }
+
+
+def record(res: dict, grid: dict) -> dict:
+    verdict = kf_verdict(res["table"])
+    return {
+        "bench": "noc_ablation",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "grid": grid,
+        "traces": res["traces"],
+        "gpu_ipc": {
+            sc: {p: round(cells[p]["gpu_ipc"], 6) for p in PREDICTORS}
+            for sc, cells in res["table"].items()
+        },
+        **verdict,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one seed on the gate scenario at full simulated "
+                         "dims (see SMOKE); no BENCH_noc.json append")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 unless KF >= every naive predictor on the "
+                         "phase-shift scenario AND the grid ran single-trace")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the ablation batch axis across N devices")
+    args = ap.parse_args(argv)
+
+    n_epochs, overrides = 120, {}
+    if args.smoke:
+        seeds, scenarios = SMOKE["seeds"], SMOKE["scenarios"]
+    else:
+        seeds, scenarios = SEEDS, SCENARIO_SET
+
+    res = run(n_epochs=n_epochs, seeds=seeds, scenarios=scenarios,
+              devices=args.devices, **overrides)
+    print("scenario,predictor,gpu_ipc,gpu_ipc_std,cpu_ipc,avg_latency,"
+          "boost_frac")
+    for sc, cells in res["table"].items():
+        for p, s in cells.items():
+            print(f"{sc},{p},{s['gpu_ipc']:.4f},{s['gpu_ipc_std']:.4f},"
+                  f"{s['cpu_ipc']:.4f},{s['avg_latency']:.2f},"
+                  f"{s['kf_on_frac']:.2f}")
+
+    verdict = kf_verdict(res["table"])
+    print(f"# traces: {res['traces']} (contract: 1)")
+    print(f"# {verdict['scenario']}: KF gpu_ipc {verdict['kf_gpu_ipc']:.4f}; "
+          "margins vs naive: "
+          + ", ".join(f"{p} {m:+.4f}" for p, m in verdict["margins"].items()))
+    print(f"# kf_beats_all: {verdict['kf_beats_all']} "
+          "(paper Fig. 9/10 ordering: KF >= every naive predictor)")
+
+    if not args.smoke:
+        from benchmarks.bench_sweep import BENCH_PATH, append_record
+
+        grid = {"scenarios": list(scenarios), "predictors": list(PREDICTORS),
+                "seeds": list(seeds), "n_epochs": n_epochs}
+        rec = record(res, grid)
+        append_record(rec)
+        print(json.dumps(rec, indent=2))
+        print(f"appended noc_ablation record to {BENCH_PATH}")
+
+    if args.gate:
+        failures = []
+        if res["traces"] != 1:
+            failures.append(f"ablation grid traced simulate {res['traces']}x "
+                            "(contract: the one shared program)")
+        if not verdict["kf_beats_all"]:
+            losing = {p: m for p, m in verdict["margins"].items() if m < 0}
+            failures.append(
+                f"KF lost to {losing} on {verdict['scenario']} mean GPU IPC")
+        for f in failures:
+            print(f"ABLATION GATE: {f}", file=sys.stderr)
+        if failures:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

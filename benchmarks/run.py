@@ -86,6 +86,16 @@ def main(argv=None):
           f"{rec['speedup_end_to_end']:.1f}x end-to-end, "
           f"{rec['speedup_steady']:.1f}x steady-state")
 
+    _section("Predictor ablation — KF vs naive predictors (DESIGN.md §12)")
+    from benchmarks import fig_ablation
+    ab = fig_ablation.run(**(fig_ablation.SMOKE if args.fast else {}))
+    for sc, cells in ab["table"].items():
+        print(f"{sc}: " + "  ".join(
+            f"{p}={s['gpu_ipc']:.3f}" for p, s in cells.items()))
+    verdict = fig_ablation.kf_verdict(ab["table"])
+    print(f"kf_beats_all={verdict['kf_beats_all']} on "
+          f"{verdict['scenario']} ({ab['traces']} trace)")
+
     _section("TPU adaptation — KF-arbitrated serving engine A/B")
     from benchmarks import kf_scheduler_ab
     res = kf_scheduler_ab.run()

@@ -25,6 +25,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.predictor import PredictorPolicy, predictor_policy
+
 Array = jax.Array
 
 
@@ -107,6 +109,12 @@ class ModePolicy(NamedTuple):
     program (padded subnets are zero-width: never injected into, links never
     active).
 
+    Since the predictor-ablation subsystem (DESIGN.md §12) the *predictor*
+    driving the hysteresis machine is traced data too: ``predictor`` is a
+    `repro.core.predictor.PredictorPolicy` sub-pytree selecting which bank
+    member (KF / EMA / last-value / always-on / always-off) emits the
+    epoch-boundary signal.
+
     Leaves may carry a leading batch dimension when stacked.
     """
 
@@ -119,6 +127,7 @@ class ModePolicy(NamedTuple):
     four_subnet: Array  # () bool — class-segregated subnet routing (Fig. 9)
     sub_enabled: Array  # (S,) bool — live rows of the padded subnet axis
     sub_is_req: Array   # (S,) bool — request-direction subnets (rest: reply)
+    predictor: PredictorPolicy  # traced predictor-bank selection (§12)
 
 
 def mode_policy(
@@ -128,6 +137,8 @@ def mode_policy(
     *,
     n_subnets: int | None = None,
     active_vcs: int | None = None,
+    predictor: str = "kf",
+    ema_alpha: float = 0.5,
 ) -> ModePolicy:
     """Build the traced policy tensors for one of the paper's modes.
 
@@ -144,6 +155,10 @@ def mode_policy(
     ``>= active_vcs`` are masked off for both classes, which is how the
     4-subnet network (2 VCs/subnet) rides a V-padded shared program.  Both
     default to the mode's dedicated (unpadded) structure.
+
+    ``predictor``/``ema_alpha`` pick the bank member that emits the
+    reconfiguration signal (repro.core.predictor; meaningful only when the
+    hysteresis machine is enabled, i.e. mode="kf").
     """
     if n_subnets is None:
         n_subnets = 4 if mode == "4subnet" else 2
@@ -194,6 +209,7 @@ def mode_policy(
         four_subnet=jnp.asarray(mode == "4subnet"),
         sub_enabled=sub_enabled,
         sub_is_req=sub_is_req,
+        predictor=predictor_policy(predictor, ema_alpha=ema_alpha),
     )
 
 

@@ -178,6 +178,19 @@ def paper_params(
     )
 
 
+def one_step_prediction(params: KalmanParams, state: KalmanState) -> Array:
+    """The filter's forecast for the NEXT epoch's state: `A x_k` (Eq. 1
+    without the control term).
+
+    This is the quantity the paper's controller actually thresholds — "the
+    KF *predicts* next-epoch demand" — made explicit for the predictor bank
+    (repro.core.predictor).  For the paper's random-walk model (A = I) it
+    equals the posterior elementwise, so binarizing it is bitwise-identical
+    to the legacy `binarize(x_post)` path.
+    """
+    return params.a @ state.x
+
+
 def normalize_observations(raw: Array, lo: Array, hi: Array) -> Array:
     """Scale raw counters into [-1, 1] (paper §3.2 preprocessing)."""
     mid = 0.5 * (hi + lo)

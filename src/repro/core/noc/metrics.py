@@ -27,9 +27,18 @@ CPU_LAT_SENSITIVITY = 0.01
 
 
 def gpu_ipc_proxy(served, demand):
-    return GPU_BASE_IPC * jnp.minimum(
-        served / jnp.maximum(demand, 1.0), 1.0
-    )
+    """Served/demand completion fraction, capped at 1.
+
+    Zero-demand epochs (reachable in the low phase of sparse workloads:
+    14 tiles x rate_lo x epoch_len < 1 expected packet) mean the GPU issued
+    nothing — it is idle, not stalled — so they score the base IPC instead
+    of the silent 0 the old `served / max(demand, 1)` clamp produced.  For
+    any positive demand the divisor is exact (the old clamp also deflated
+    fractional demands, which integer counters never produce but trace
+    replays / unit tests can).
+    """
+    frac = jnp.minimum(served / jnp.maximum(demand, 1e-9), 1.0)
+    return GPU_BASE_IPC * jnp.where(demand > 0, frac, 1.0)
 
 
 def cpu_ipc_proxy(avg_latency):

@@ -35,6 +35,14 @@ donated carry buffers) and can shard that axis data-parallel across devices
 (``devices=``/``mesh=``, via the `repro.dist.sharding.shard_map` shim);
 ``sweep`` / ``sweep_sharded`` are the drivers the paper-figure benchmarks
 run on.
+
+Predictor ablation + scenario schedules (DESIGN.md §12): the epoch-boundary
+reconfiguration signal comes from a traced predictor *bank*
+(`repro.core.predictor` — KF / EMA / last-value / always-on / always-off,
+selected by `ModePolicy.predictor.kind`), and workloads — stationary or
+`traffic.ScenarioSchedule` programs — are materialized to per-epoch
+parameter rows consumed through the epoch scan's `xs`, so the whole
+ablation x scenario grid still costs the ONE compiled program.
 """
 from __future__ import annotations
 
@@ -46,7 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import kalman
+from repro.core import kalman, predictor
 from repro.core.allocator import (
     ModePolicy,
     PolicyConfig,
@@ -60,10 +68,12 @@ from repro.core.noc import metrics
 from repro.core.noc import router as rt
 from repro.core.noc.topology import make_topology
 from repro.core.noc.traffic import (
-    PROFILES,
+    ScenarioSchedule,
     WorkloadProfile,
     init_phase,
     injection_rates,
+    lookup_workload,
+    materialize,
     stack_profiles,
     step_phase_u,
 )
@@ -107,6 +117,11 @@ class SimStatic:
     # "pallas" = the repro.kernels.noc_cycle lane kernel).
     cycle_unroll: int = 1
     backend: str = "ref"
+    # injection-stamp dtype: "auto" picks uint16 whenever every age the run
+    # can produce is wraparound-exact (see init_sim_state); "int32" forces
+    # the wide stamps — a test/debug knob the uint16-boundary regression
+    # test uses to pin auto == int32 bitwise at the 2^16-cycle boundary.
+    stamp_dtype: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +148,12 @@ class NoCConfig:
     seed: int = 0
     cycle_unroll: int = 1         # inner cycle-scan unroll factor
     backend: str = "ref"          # arbitration backend: ref | pallas
+    stamp_dtype: str = "auto"     # injection-stamp dtype: auto | int32
+    # predictor-ablation knobs (DESIGN.md §12): which bank member drives the
+    # hysteresis machine (only meaningful for mode="kf") and the EMA
+    # predictor's smoothing factor.  Traced data — not part of SimStatic.
+    predictor: str = "kf"
+    ema_alpha: float = 0.5   # the textbook naive-EMA default
 
     @property
     def n_subnets(self) -> int:
@@ -165,6 +186,7 @@ class NoCConfig:
             kf_r=self.kf_r,
             cycle_unroll=self.cycle_unroll,
             backend=self.backend,
+            stamp_dtype=self.stamp_dtype,
         )
 
     def mode_policy(self, padded: bool = True) -> ModePolicy:
@@ -172,6 +194,7 @@ class NoCConfig:
         return mode_policy(
             self.mode, stc.n_vcs, self.static_gpu_vcs,
             n_subnets=stc.n_subnets, active_vcs=self.vcs_per_subnet,
+            predictor=self.predictor, ema_alpha=self.ema_alpha,
         )
 
 
@@ -243,15 +266,25 @@ def init_sim_state(stc: SimStatic, batch: int | None = None):
             shape = (batch,) + shape
         return jnp.zeros(shape, dtype)
 
-    # Injection stamps ride uint16 when every possible stamp/age fits: the
-    # latency subtraction is wraparound-exact for ages < 2^16, and a packet
-    # can never outlive the run.  (+1: epoch-end replies are stamped with
-    # the next epoch's first cycle.)
-    binj_dtype = (
-        jnp.uint16
-        if stc.epoch_len * stc.n_epochs + 1 <= 0xFFFF
-        else jnp.int32
-    )
+    # Injection stamps ride uint16 when every possible age fits: the latency
+    # subtraction is wraparound-exact for ages <= 2^16 - 1.  The max age is
+    # `total - 1` (a cycle-0 injection ejected on the last cycle): stamps
+    # are injection cycles <= total - 1 — epoch-end replies carry the next
+    # epoch's first cycle, but the run's final cycle defers its replies to
+    # an epoch prologue that never executes, so no stamp exceeds total - 1
+    # either — hence uint16 is exact whenever total <= 2^16.  (The old gate
+    # `total + 1 <= 0xFFFF` was conservative by two: totals of exactly
+    # 65535/65536 cycles paid int32 stamps for no reason — pinned at the
+    # boundary by tests/test_predictor_ablation.py.)
+    total_cycles = stc.epoch_len * stc.n_epochs
+    if stc.stamp_dtype == "int32":
+        binj_dtype = jnp.int32
+    elif stc.stamp_dtype == "auto":
+        binj_dtype = jnp.uint16 if total_cycles <= 2**16 else jnp.int32
+    else:
+        raise ValueError(
+            f"unknown stamp_dtype {stc.stamp_dtype!r}; expected auto|int32"
+        )
     subnets0 = rt.SubnetState(
         buf_meta=z((S, R, rt.N_PORTS, V, B), jnp.int16),
         buf_binj=z((S, R, rt.N_PORTS, V, B), binj_dtype),
@@ -293,6 +326,12 @@ def _simulate_impl(
     seed: Array,
     state0,
 ) -> SimResult:
+    """Core jitted simulation.  ``profile`` arrives MATERIALIZED: every leaf
+    is an (n_epochs,) float32 row (``traffic.materialize``), consumed by the
+    epoch scan as `xs` — one parameter row per epoch.  Stationary workloads
+    broadcast their scalars across the epoch axis, so scenario schedules
+    (piecewise switches, ramps, pinned burst phases — DESIGN.md §12) share
+    this one trace with them by construction."""
     _trace_counter[0] += 1  # Python side effect: runs only at trace time
 
     topo = make_topology()
@@ -347,8 +386,9 @@ def _simulate_impl(
             & sub_enabled[:, None]
         )
 
-    def epoch_body(carry, epoch_key):
-        subs, mc, phase, outst, backlog, policy, kf_state, cycle0 = carry
+    def epoch_body(carry, epoch_xs):
+        epoch_key, prof = epoch_xs  # prof: this epoch's scalar-leaf profile
+        subs, mc, phase, outst, backlog, policy, pred_state, cycle0 = carry
 
         # ---- epoch-invariant hoisting (DESIGN.md §11): `policy.config` is
         # frozen until the KF acts at the epoch boundary, so the VC masks,
@@ -477,7 +517,8 @@ def _simulate_impl(
 
             # Fig. 11 packet latency: network time (injection -> ejection).
             # The subtraction runs in the stamp dtype — wraparound-exact
-            # for uint16 stamps because ages are < 2^16 by construction.
+            # for uint16 stamps because ages are <= total - 1 <= 2^16 - 1
+            # by construction (the init_sim_state stamp-dtype gate).
             dt = events.eject_binj.dtype
             age = (cycle.astype(dt) - events.eject_binj).astype(jnp.int32)
             ej_lat = jnp.where(events.eject_valid, age, 0)
@@ -485,8 +526,8 @@ def _simulate_impl(
             gpu_ej = events.eject_valid & (events.eject_cls == 1)
 
             # ---- 4. source generation -> per-node source-queue depth
-            phase = step_phase_u(profile, phase, u_ph)
-            rates = injection_rates(profile, ntype, phase)
+            phase = step_phase_u(prof, phase, u_ph)
+            rates = injection_rates(prof, ntype, phase)
             gen = (u_gen_c < rates) & ~is_mc  # == bernoulli(k_gen, rates)
             # push into the per-node source queue (drop + stall if full)
             can_push = gen & (bl_count < BCAP)
@@ -573,8 +614,13 @@ def _simulate_impl(
             ]
         )
         z = kalman.normalize_observations(raw, jnp.zeros(3), z_scales)
-        kf_state, _, _ = kalman.step(kf_params, kf_state, z)
-        signal = kalman.binarize(kf_state.x[0])
+        # predictor bank (DESIGN.md §12): every member advances, the traced
+        # `mp.predictor.kind` selects which signal drives the hysteresis
+        # machine — the KF lane reproduces the legacy
+        # `binarize(kalman.step(...).x[0])` bitwise.
+        pred_state, signal = predictor.step(
+            mp.predictor, kf_params, pred_state, z
+        )
         policy = apply_policy_gated(stc.policy, mp, policy, signal, cycle)
 
         # ---- IPC proxies (documented in metrics.py)
@@ -589,7 +635,7 @@ def _simulate_impl(
 
         out = (gpu_ipc, cpu_ipc, avg_lat, signal, policy.config, cnt, inj_rate,
                jnp.sum(g_vec.astype(jnp.int32)))
-        return (subs, mc, phase, outst, backlog, policy, kf_state, cycle), out
+        return (subs, mc, phase, outst, backlog, policy, pred_state, cycle), out
 
     key0 = jax.random.PRNGKey(seed)
     epoch_keys = jax.random.split(key0, stc.n_epochs)
@@ -600,11 +646,11 @@ def _simulate_impl(
         outstanding0,
         backlog0,
         init_policy_state(),
-        kalman.init_state(1),
+        predictor.init_state(),
         jnp.int32(0),
     )
     _, (gpu_ipc, cpu_ipc, avg_lat, sig, conf, cnt, inj, quota) = jax.lax.scan(
-        epoch_body, carry0, epoch_keys
+        epoch_body, carry0, (epoch_keys, profile)
     )
     return SimResult(
         gpu_ipc=gpu_ipc,
@@ -644,10 +690,18 @@ def _batch_jit():
 
 
 def simulate(
-    cfg: NoCConfig, profile: WorkloadProfile, padded: bool = True,
+    cfg: NoCConfig,
+    profile: str | WorkloadProfile | ScenarioSchedule,
+    padded: bool = True,
     backend: str | None = None,
 ) -> SimResult:
     """Run one configuration (compiles at most once per `SimStatic`).
+
+    ``profile`` may be a stationary `WorkloadProfile`, a
+    `traffic.ScenarioSchedule` (piecewise workload program — DESIGN.md §12),
+    or a name resolving to either; it is materialized to per-epoch rows
+    before dispatch, so scenarios reuse the same compiled program as
+    stationary workloads.
 
     With ``padded=True`` (default) every mode runs the shared S/V-padded
     program; ``padded=False`` compiles the mode's dedicated trace, kept so
@@ -662,7 +716,7 @@ def simulate(
     return _SIM_JIT(
         stc,
         cfg.mode_policy(padded),
-        profile,
+        materialize(profile, stc.n_epochs),
         jnp.int32(cfg.seed),
         init_sim_state(stc),
     )
@@ -730,7 +784,7 @@ def _sharded_jit(stc: SimStatic, mesh):
 
 def simulate_batch(
     cfgs: Sequence[NoCConfig],
-    profiles: WorkloadProfile | Sequence[WorkloadProfile],
+    profiles: str | WorkloadProfile | ScenarioSchedule | Sequence,
     seeds: Sequence[int] | None = None,
     batch_tile: int | None = None,
     devices: int | None = None,
@@ -740,8 +794,11 @@ def simulate_batch(
     one device dispatch per tile.
 
     cfgs      — length-B configs; all must share the same `static_spec()`
-                (mode/ratio/seed/subnet-structure are traced).
-    profiles  — length-B workload profiles, or one profile for all rows.
+                (mode/ratio/seed/subnet-structure/predictor are traced).
+    profiles  — length-B workloads, or one for all rows; each entry may be
+                a `WorkloadProfile`, a `traffic.ScenarioSchedule`, or a
+                name resolving to either (all rows are materialized to
+                per-epoch rows and share the one compiled program).
     seeds     — optional per-row seeds; defaults to each cfg's own seed.
     batch_tile— if set, the batch is processed in fixed-size tiles (short
                 batches and the ragged tail padded up), so EVERY sweep in
@@ -768,9 +825,9 @@ def simulate_batch(
                 f"config; got {c.static_spec()} != {stc} — group with sweep()"
             )
     B = len(cfgs)
-    if isinstance(profiles, WorkloadProfile):
+    if isinstance(profiles, (str, WorkloadProfile, ScenarioSchedule)):
         profiles = [profiles] * B
-    profiles = list(profiles)
+    profiles = [materialize(p, stc.n_epochs) for p in profiles]
     if len(profiles) != B:
         raise ValueError(f"{len(profiles)} profiles for {B} configs")
     if seeds is None:
@@ -815,12 +872,18 @@ def simulate_batch(
 
 
 class SweepSpec(NamedTuple):
-    """One row of a sweep: a network config x workload x seed point."""
+    """One row of a sweep: a network config x workload x seed point.
+
+    ``workload`` names either a stationary profile (`traffic.PROFILES`) or
+    a scenario schedule (`traffic.SCENARIOS`); ``predictor`` picks the bank
+    member driving the hysteresis machine (meaningful for mode="kf" — the
+    predictor-ablation axis, DESIGN.md §12)."""
 
     mode: str
     workload: str
     static_gpu_vcs: int = 2
     seed: int = 0
+    predictor: str = "kf"
 
 
 # Tile size for sweep batches.  The paper sweeps (4 workloads x 3 ratios,
@@ -857,14 +920,14 @@ def sweep(
     for i, sp in enumerate(specs):
         cfg = NoCConfig(
             mode=sp.mode, static_gpu_vcs=sp.static_gpu_vcs, seed=sp.seed,
-            **overrides,
+            predictor=sp.predictor, **overrides,
         )
         cfgs.append(cfg)
         groups[cfg.static_spec()].append(i)
     for idxs in groups.values():
         res = simulate_batch(
             [cfgs[i] for i in idxs],
-            [PROFILES[specs[i].workload] for i in idxs],
+            [lookup_workload(specs[i].workload) for i in idxs],
             batch_tile=batch_tile,
             devices=devices,
             mesh=mesh,
@@ -895,11 +958,15 @@ def sweep_sharded(
 
 def run_workload(mode: str, workload: str, **overrides) -> SimResult:
     cfg = NoCConfig(mode=mode, **overrides)
-    return simulate(cfg, PROFILES[workload])
+    return simulate(cfg, lookup_workload(workload))
 
 
 def summarize(res: SimResult, warmup_epochs: int = 10) -> dict:
-    sl = slice(warmup_epochs, None)
+    # Clamp the warmup slice so short runs (n_epochs <= warmup_epochs, e.g.
+    # the fig4/fig12 smoke invocations) summarize their tail epoch instead
+    # of taking the mean of an empty slice (NaN).
+    n_epochs = int(res.gpu_ipc.shape[-1])
+    sl = slice(min(warmup_epochs, max(n_epochs - 1, 0)), None)
     return {
         "gpu_ipc": float(jnp.mean(res.gpu_ipc[sl])),
         "cpu_ipc": float(jnp.mean(res.cpu_ipc[sl])),

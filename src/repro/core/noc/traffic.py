@@ -20,13 +20,29 @@ static hashable: the simulator traces over the rates, so every workload
 shares one compiled program (DESIGN.md §4).  Profile names live in the
 ``PROFILES`` dict keys.  ``stack_profiles`` builds the batched (B,)-leaf
 profile pytree consumed by ``sim.simulate_batch``.
+
+Scenario schedules (DESIGN.md §12)
+----------------------------------
+Real chiplet workloads are not stationary: programs phase-shift (SHIFT's
+compute relocation), ramp, and time-multiplex.  ``ScenarioSchedule``
+expresses a *workload program* as piecewise segments — each a base profile,
+optionally ramping into another and/or pinning the Markov burst phase —
+and ``materialize`` lowers any workload (plain profile or schedule) to a
+per-epoch ``WorkloadProfile`` whose leaves are ``(n_epochs,)`` rows of
+``(rate_lo, rate_hi, p_enter, p_exit, cpu_rate)``.  The simulator feeds
+those rows through its epoch scan as ``xs``, so scenario points share the
+same single compiled program as stationary ones.  Named scenarios live in
+``SCENARIOS``; ``lookup_workload`` resolves a name from either table.
 """
 from __future__ import annotations
+
+import dataclasses
 
 from typing import Iterable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -119,3 +135,261 @@ def pick_mc_dest(key: Array, shape, mc_ids: Array) -> Array:
     """Uniformly choose a destination MC for each generated request."""
     idx = jax.random.randint(key, shape, 0, mc_ids.shape[0])
     return mc_ids[idx]
+
+
+# ---------------------------------------------------------------------------
+# Scenario schedules: piecewise workload programs (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _resolve_profile(p: str | WorkloadProfile) -> WorkloadProfile:
+    return PROFILES[p] if isinstance(p, str) else p
+
+
+class Segment(NamedTuple):
+    """One piece of a scenario: governs epochs in [start, next start).
+
+    start      — fraction of the run in [0, 1) where this segment begins
+                 (fractional so one schedule serves any ``n_epochs``).
+    profile    — base injection parameters (name or WorkloadProfile).
+    ramp_to    — if set, rates interpolate linearly from ``profile`` to this
+                 across the segment (a rate ramp).
+    pin_phase  — None leaves the Markov burst phase free; 0/1 force the
+                 phase low/high via (p_enter, p_exit) = (0,1)/(1,0), making
+                 burst timing deterministic to within one cycle.
+    """
+
+    start: float
+    profile: str | WorkloadProfile
+    ramp_to: str | WorkloadProfile | None = None
+    pin_phase: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSchedule:
+    """A piecewise-constant (or ramped) workload program.
+
+    ``materialize(n_epochs)`` lowers the schedule to a ``WorkloadProfile``
+    with ``(n_epochs,)`` float32 leaves — one parameter row per epoch —
+    which the simulator consumes through its epoch scan ``xs``.  Epoch
+    boundaries are exact: epoch ``e`` is governed by the last segment with
+    ``round(start * n_epochs) <= e``.
+    """
+
+    segments: tuple[Segment, ...]
+
+    def __post_init__(self):
+        if not self.segments:
+            raise ValueError("ScenarioSchedule needs at least one segment")
+        starts = [s.start for s in self.segments]
+        if starts != sorted(starts):
+            raise ValueError(f"segment starts must be sorted, got {starts}")
+        if starts[0] != 0.0:
+            raise ValueError(f"first segment must start at 0.0, got {starts[0]}")
+        for s in self.segments:
+            if not 0.0 <= s.start < 1.0:
+                raise ValueError(f"segment start {s.start} outside [0, 1)")
+            if s.pin_phase not in (None, 0, 1):
+                raise ValueError(f"pin_phase must be None/0/1, got {s.pin_phase}")
+
+    def materialize(self, n_epochs: int) -> WorkloadProfile:
+        bounds = [int(round(s.start * n_epochs)) for s in self.segments]
+        bounds.append(n_epochs)
+        rows = {f: np.empty((n_epochs,), np.float32)
+                for f in WorkloadProfile._fields}
+        for seg, lo, hi in zip(self.segments, bounds, bounds[1:]):
+            if hi <= lo:
+                continue  # segment collapsed at this n_epochs resolution
+            base = _resolve_profile(seg.profile)
+            tgt = _resolve_profile(seg.ramp_to) if seg.ramp_to is not None else None
+            # t in [0, 1] across the segment's epochs (0/1 at its endpoints)
+            t = (np.arange(hi - lo, dtype=np.float32)
+                 / max(hi - lo - 1, 1))
+            for f in WorkloadProfile._fields:
+                a = np.float32(getattr(base, f))
+                row = a + t * (np.float32(getattr(tgt, f)) - a) if tgt is not None \
+                    else np.full((hi - lo,), a, np.float32)
+                rows[f][lo:hi] = row
+            if seg.pin_phase is not None:
+                rows["p_enter"][lo:hi] = 1.0 if seg.pin_phase == 1 else 0.0
+                rows["p_exit"][lo:hi] = 0.0 if seg.pin_phase == 1 else 1.0
+        return WorkloadProfile(**{
+            f: jnp.asarray(rows[f]) for f in WorkloadProfile._fields
+        })
+
+
+def materialize(
+    workload: str | WorkloadProfile | ScenarioSchedule, n_epochs: int
+) -> WorkloadProfile:
+    """Lower any workload to the per-epoch (n_epochs,)-leaf form the
+    simulator consumes (names resolve via `lookup_workload`).
+
+    Stationary profiles broadcast each rate scalar across the epoch axis —
+    the same float32 values the scalar-leaf trace consumed, so the lowering
+    is value-invisible (pinned by tests/test_predictor_ablation.py).
+    Already-materialized profiles pass through after a length check.
+    """
+    if isinstance(workload, str):
+        workload = lookup_workload(workload)
+    if isinstance(workload, ScenarioSchedule):
+        return workload.materialize(n_epochs)
+
+    def lower(x):
+        x = jnp.asarray(x, jnp.float32)
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (n_epochs,))
+        if x.shape != (n_epochs,):
+            raise ValueError(
+                f"per-epoch profile leaf has shape {x.shape}, expected "
+                f"({n_epochs},)"
+            )
+        return x
+
+    return jax.tree.map(lower, workload)
+
+
+def phase_shift(
+    a: str | WorkloadProfile = "PATH",
+    b: str | WorkloadProfile = "BFS",
+    at: float = 0.5,
+) -> ScenarioSchedule:
+    """Piecewise workload switch: run ``a``, then ``b`` from fraction ``at``
+    (the SHIFT-style compute-relocation scenario, e.g. PATH -> BFS mid-run)."""
+    return ScenarioSchedule((Segment(0.0, a), Segment(at, b)))
+
+
+def shift_scenario(
+    a: str | WorkloadProfile = "PATH",
+    b: str | WorkloadProfile = "BFS",
+    dip_scale: float = 0.0,
+) -> ScenarioSchedule:
+    """The predictor-ablation gate scenario: a program phase shift (``a``
+    then ``b`` mid-run) whose programs execute as deterministic kernel-phase
+    arcs — calm, a long burst, a short inter-kernel gap ("dip"), and a
+    second burst — pinned via the Markov phase so the comparison is
+    reproducible across seeds.
+
+    The arc geometry — per 30-epoch arc (canonical 120-epoch run):
+    [calm 12][burst 10][dip 2][burst 6] — is sized against the paper's
+    hysteresis constants (hold 10 epochs, revert 20) and the simulator's
+    observation dynamics (the dip's first epoch reads saturated counters
+    while the burst backlog drains; only its second epoch reads low) so
+    that *prediction quality*, not hysteresis smoothing, decides the score:
+
+      * the observational dip epoch lands 11 epochs after the burst onset
+        — past the hold — so a reactive predictor (last-value, or EMA at
+        the textbook α=0.5, since ``dip_scale=0`` drives every observation
+        to −1) is FREE to un-boost on it and then pays the hold lockout
+        for the entire second burst, while the KF's posterior rides the
+        one-epoch gap;
+      * the boosted burst span (~18 epochs) stays inside the 20-epoch
+        revert budget, so the revert rule and its hold shadow land in the
+        calm window (harmless) rather than mid-burst — the paper-tuned
+        filter (q=1e-3) takes ~10 calm epochs to release, which the
+        12-epoch calm absorbs exactly.
+    """
+    arcs = []
+    for arc, prof in ((0, a), (30, a), (60, b), (90, b)):
+        base = _resolve_profile(prof)
+        arcs += [
+            Segment(arc / 120, base, pin_phase=0),                 # calm 12
+            Segment((arc + 12) / 120, base, pin_phase=1),          # burst 10
+            Segment((arc + 22) / 120, scale_rates(base, dip_scale),
+                    pin_phase=0),                                  # dip 2
+            Segment((arc + 24) / 120, base, pin_phase=1),          # burst 6
+        ]
+    return ScenarioSchedule(tuple(arcs))
+
+
+def scale_rates(p: str | WorkloadProfile, scale: float) -> WorkloadProfile:
+    """Scale a profile's GPU injection rates (phase dynamics untouched)."""
+    p = _resolve_profile(p)
+    return p._replace(
+        gpu_rate_lo=float(p.gpu_rate_lo) * scale,
+        gpu_rate_hi=float(p.gpu_rate_hi) * scale,
+    )
+
+
+def rate_ramp(
+    base: str | WorkloadProfile = "LIB",
+    lo_scale: float = 0.5,
+    hi_scale: float = 1.5,
+) -> ScenarioSchedule:
+    """Linear offered-load ramp from ``lo_scale`` x to ``hi_scale`` x the
+    base profile's GPU rates across the whole run."""
+    base = _resolve_profile(base)
+    return ScenarioSchedule((
+        Segment(0.0, scale_rates(base, lo_scale),
+                ramp_to=scale_rates(base, hi_scale)),
+    ))
+
+
+def program_mix(
+    programs: tuple[str | WorkloadProfile, ...] = ("PATH", "STO", "BFS"),
+    repeats: int = 2,
+) -> ScenarioSchedule:
+    """Time-multiplexed multi-program mix: the programs run back-to-back in
+    equal slices, the whole sequence repeated ``repeats`` times."""
+    n = len(programs) * repeats
+    segs = tuple(
+        Segment(i / n, programs[i % len(programs)]) for i in range(n)
+    )
+    return ScenarioSchedule(segs)
+
+
+def burst_train(
+    base: str | WorkloadProfile = "BFS",
+    calm: int = 8,
+    burst: int = 10,
+    dip: int = 1,
+) -> ScenarioSchedule:
+    """Deterministic burst train with mid-burst micro-dips, on a 64-slot
+    fractional grid: ``calm`` slots pinned low, then a burst of ``burst``
+    slots pinned high broken by a ``dip``-slot pinned-low notch, repeating.
+
+    A reporting scenario, NOT the ablation gate: its notches land inside
+    the hysteresis hold window, so every predictor rides them and the
+    measured predictor spread is within noise (see the committed
+    `noc_ablation` rows — last-value even noses ahead).  The gate scenario
+    is `shift_scenario`, whose dip geometry is sized against the hold and
+    revert constants so prediction quality actually separates.
+    """
+    base = _resolve_profile(base)
+    if calm + burst + dip + burst > 64:
+        raise ValueError("one burst unit must fit the 64-slot grid")
+    segs, pos = [], 0
+    while pos < 64:
+        for length, pin in ((calm, 0), (burst, 1), (dip, 0), (burst, 1)):
+            if pos >= 64:
+                break
+            segs.append(Segment(pos / 64, base, pin_phase=pin))
+            pos += length
+    return ScenarioSchedule(tuple(segs))
+
+
+# Scenario library (DESIGN.md §12).  Names share the SweepSpec.workload
+# namespace with PROFILES and resolve through `lookup_workload`.
+SCENARIOS: dict[str, ScenarioSchedule] = {
+    # SHIFT-style program relocation (moderate PATH, then bursty BFS) with
+    # deterministic kernel-phase arcs — the predictor-ablation gate.
+    "SHIFT_PATH_BFS": shift_scenario("PATH", "BFS"),
+    # the plain mid-run workload switch, Markov phases left free
+    "SHIFT_SMOOTH": phase_shift("PATH", "BFS", at=0.5),
+    # offered-load ramp through the contention knee
+    "RAMP_LIB": rate_ramp("LIB", 0.5, 1.5),
+    # time-multiplexed multi-program mix
+    "MIX_PATH_STO_BFS": program_mix(("PATH", "STO", "BFS"), repeats=2),
+    # deterministic burst train with micro-dips (ablation stressor)
+    "BURSTS_BFS": burst_train("BFS"),
+}
+
+
+def lookup_workload(name: str) -> WorkloadProfile | ScenarioSchedule:
+    """Resolve a workload name from PROFILES or SCENARIOS."""
+    if name in PROFILES:
+        return PROFILES[name]
+    if name in SCENARIOS:
+        return SCENARIOS[name]
+    raise KeyError(
+        f"unknown workload {name!r}; profiles: {sorted(PROFILES)}, "
+        f"scenarios: {sorted(SCENARIOS)}"
+    )

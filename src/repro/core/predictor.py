@@ -1,0 +1,139 @@
+"""Predictor bank for the reconfiguration controller (DESIGN.md §12).
+
+The paper's central claim is not "a KF can drive reconfiguration" but "a KF
+predicts next-epoch demand *better than naive predictors*, so the network
+reacts without thrashing".  Reproducing that claim needs the naive
+predictors as first-class citizens of the same controller: this module
+generalizes the epoch-boundary step
+
+    counters -> normalize -> Kalman step -> binarize -> hysteresis machine
+
+into a *bank* of predictors sharing one traced program.  Which predictor
+drives the hysteresis machine is selected by a traced tensor
+(`PredictorPolicy.kind`), never a Python branch, so the whole ablation grid
+(predictor x scenario x workload x seed) batches into the simulator's ONE
+compiled program (`sim.trace_count() == 1`) and the default KF path stays
+bitwise-identical to `tests/golden_cycle_engine.json`.
+
+Predictor kinds (paper Fig. 9/10 ablation axis):
+
+  * ``kf``         — the paper's filter: scalar-state KF over the 3
+                     normalized NoC observations; the signal binarizes the
+                     one-step prediction `A x_k` (== the posterior for the
+                     paper's random-walk A = I, bitwise).
+  * ``ema``        — exponential moving average of the mean observation
+                     with traced smoothing factor α.
+  * ``last``       — last-value predictor: next epoch == this epoch's mean
+                     observation (the "naive" baseline of the paper's
+                     comparison).
+  * ``always_on``  — constant boost request (upper envelope of reactive
+                     boosting; the hysteresis revert rule still cycles it).
+  * ``always_off`` — never request a boost (== the static fair split).
+
+Every predictor's state advances every epoch regardless of `kind` (the
+selection applies only to the emitted signal), which is what keeps the
+program branch-free; the extra EMA arithmetic is two fused scalar ops per
+epoch — noise next to the cycle scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kalman
+
+Array = jax.Array
+
+# Predictor-kind encoding for the traced selector.  Order is load-bearing:
+# `step` stacks the candidate signals in this order and `jnp.take`s by kind.
+KF = 0
+EMA = 1
+LAST = 2
+ALWAYS_ON = 3
+ALWAYS_OFF = 4
+
+PREDICTORS: dict[str, int] = {
+    "kf": KF,
+    "ema": EMA,
+    "last": LAST,
+    "always_on": ALWAYS_ON,
+    "always_off": ALWAYS_OFF,
+}
+
+
+class PredictorPolicy(NamedTuple):
+    """Traced predictor selection: which bank member drives the hysteresis
+    machine, plus the naive predictors' parameters.
+
+    Leaves may carry a leading batch dimension when stacked for
+    `sim.simulate_batch` (exactly like `allocator.ModePolicy`, which embeds
+    one of these).
+    """
+
+    kind: Array       # () int32 in [0, 5) — see PREDICTORS
+    ema_alpha: Array  # () float32 — EMA smoothing factor
+    threshold: Array  # () float32 — binarization threshold (paper: 0.0)
+
+
+def predictor_policy(
+    name: str = "kf", ema_alpha: float = 0.5, threshold: float = 0.0
+) -> PredictorPolicy:
+    """Build the traced selector for one predictor by name."""
+    if name not in PREDICTORS:
+        raise ValueError(
+            f"unknown predictor {name!r}; expected one of {sorted(PREDICTORS)}"
+        )
+    if not 0.0 < ema_alpha <= 1.0:
+        raise ValueError(f"ema_alpha={ema_alpha} outside (0, 1]")
+    return PredictorPolicy(
+        kind=jnp.int32(PREDICTORS[name]),
+        ema_alpha=jnp.float32(ema_alpha),
+        threshold=jnp.float32(threshold),
+    )
+
+
+class PredictorState(NamedTuple):
+    """Carry for the whole bank: every member's state advances each epoch."""
+
+    kf: kalman.KalmanState  # x (1,), p (1, 1)
+    ema: Array              # () float32 — EMA of the mean observation
+
+
+def init_state(dtype=jnp.float32) -> PredictorState:
+    """Zero state — the KF member is exactly `kalman.init_state(1)`."""
+    return PredictorState(
+        kf=kalman.init_state(1, dtype=dtype), ema=jnp.zeros((), dtype)
+    )
+
+
+def step(
+    pp: PredictorPolicy,
+    kf_params: kalman.KalmanParams,
+    state: PredictorState,
+    z: Array,
+) -> tuple[PredictorState, Array]:
+    """Advance the bank one epoch and emit the selected binary signal.
+
+    z: (m,) normalized observations (the same vector the KF consumes).
+    Returns (new_state, signal) with signal a () int32 in {0, 1}.
+
+    Bitwise contract: with ``kind == KF`` the emitted signal is exactly the
+    legacy `binarize(kalman.step(...).x[0])` — the one-step prediction
+    `A x_k` equals the posterior elementwise for the paper's A = I, and the
+    `jnp.take` selection is an identity on the chosen lane.
+    """
+    kf_post, _, _ = kalman.step(kf_params, state.kf, z)
+    zbar = jnp.mean(z)
+    ema = pp.ema_alpha * zbar + (1.0 - pp.ema_alpha) * state.ema
+
+    x_pred = kalman.one_step_prediction(kf_params, kf_post)[0]
+    sig_kf = kalman.binarize(x_pred, pp.threshold)
+    sig_ema = kalman.binarize(ema, pp.threshold)
+    sig_last = kalman.binarize(zbar, pp.threshold)
+    candidates = jnp.stack(
+        [sig_kf, sig_ema, sig_last, jnp.int32(1), jnp.int32(0)]
+    )
+    signal = jnp.take(candidates, pp.kind)
+    return PredictorState(kf=kf_post, ema=ema), signal
