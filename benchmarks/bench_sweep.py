@@ -24,6 +24,7 @@ the first-pass excess over it.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -116,7 +117,8 @@ def state_bytes(stc) -> int:
 
 
 def run(n_epochs: int = 8, epoch_len: int = 100,
-        seeds=(0, 1), smoke: bool = False, devices: int | None = None) -> dict:
+        seeds=(0, 1), smoke: bool = False, devices: int | None = None,
+        sim_backend: str = "ref") -> dict:
     """Default grid: 24 points x 800 cycles — the smoke/--fast sweep regime
     where the seed's per-point recompile dominated wall-clock.
 
@@ -129,15 +131,26 @@ def run(n_epochs: int = 8, epoch_len: int = 100,
     `benchmarks/check_bench.py` gates it.  SMOKE rows are different: their
     steady pass is milliseconds of scan against fixed per-op dispatch
     overhead, swinging 0.2-1x run to run — meaningless for trend-reading,
-    which is why only full rows land in BENCH_noc.json."""
+    which is why only full rows land in BENCH_noc.json.
+
+    `sim_backend` switches the BATCHED arm's cycle engine ("ref" |
+    "pallas" fused full-cycle kernel | "pallas_arb"); the serial arms
+    always run the dense ref engine so every row's serial baseline stays
+    comparable across the committed trajectory, and the resulting
+    `speedup_*` is the honest serial-ref-vs-batched-<backend> number
+    (interpret-mode Pallas on CPU — see `check_bench.check_pallas_row`)."""
     workloads = ("PATH", "LIB") if smoke else ("PATH", "LIB", "STO", "MUM")
     ratios = (1, 3) if smoke else (1, 2, 3)
     if smoke:
         n_epochs, epoch_len, seeds = 4, 50, (0,)
-    ov = dict(n_epochs=n_epochs, epoch_len=epoch_len)
+    ov = dict(n_epochs=n_epochs, epoch_len=epoch_len, backend=sim_backend)
     cfgs, profs = _grid(workloads, ratios, seeds, **ov)
+    ref_cfgs = (
+        cfgs if sim_backend == "ref"
+        else [dataclasses.replace(c, backend="ref") for c in cfgs]
+    )
 
-    serial_total = time_serial_seed_style(cfgs, profs)
+    serial_total = time_serial_seed_style(ref_cfgs, profs)
 
     sim.reset_trace_count()
     t0 = time.perf_counter()
@@ -148,7 +161,7 @@ def run(n_epochs: int = 8, epoch_len: int = 100,
     _block(sim.simulate_batch(cfgs, profs))
     batched_steady = time.perf_counter() - t0
 
-    serial_steady = time_serial_steady(cfgs, profs)
+    serial_steady = time_serial_steady(ref_cfgs, profs)
 
     stc = cfgs[0].static_spec()
     rec = {
@@ -235,10 +248,14 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=None,
                     help="also time the device-sharded dispatch over N "
                          "devices (asserts equality with the batched arm)")
+    ap.add_argument("--backend", choices=("ref", "pallas", "pallas_arb"),
+                    default="ref",
+                    help="cycle engine for the batched arm (serial arms "
+                         "always time the dense ref engine)")
     args = ap.parse_args(argv)
     rec = run(n_epochs=args.epochs, epoch_len=args.epoch_len,
               seeds=tuple(range(args.seeds)), smoke=args.smoke,
-              devices=args.devices)
+              devices=args.devices, sim_backend=args.backend)
     sharded = rec.pop("sharded", None)
     print(json.dumps(rec, indent=2))
     if sharded is not None:

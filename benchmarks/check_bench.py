@@ -36,6 +36,11 @@ every naive predictor on the phase-shift scenario from a single-trace grid
 — a committed ablation row that stopped clearing the paper's ordering is a
 regression even though this script never re-runs the (expensive) grid.
 
+Fused-engine rows (`bench_sweep --backend pallas`, DESIGN.md §13) are
+guarded the same way via `check_pallas_row`: they never become the ref
+baseline, and once one is committed it must show a single-trace batched
+arm with a recorded steady speedup.
+
     PYTHONPATH=src python -m benchmarks.check_bench [--grid smoke|full]
 
 Exit code 0 = within tolerance, 1 = regression (message says which gate).
@@ -61,11 +66,58 @@ def load_records(path: str) -> list:
 
 
 def last_committed_row(records: list, bench: str = "noc_sweep_serial_vs_batched"):
-    rows = [r for r in records if r.get("bench") == bench]
+    """Last committed row of the REF-engine trajectory.
+
+    Rows produced with `bench_sweep --backend pallas|pallas_arb` carry a
+    `sim_backend` marker and are excluded here: they time a different
+    engine (interpret-mode Pallas on CPU), so letting one become the
+    baseline would silently relax — or falsely trip — every relative gate.
+    Pre-PR-4 rows lack the field and are ref by construction.
+    """
+    rows = [
+        r for r in records
+        if r.get("bench") == bench and r.get("sim_backend", "ref") == "ref"
+    ]
     if not rows:
-        msg = f"no committed {bench!r} row in the bench json"
+        msg = f"no committed ref-engine {bench!r} row in the bench json"
         raise SystemExit(msg + "; run benchmarks.bench_sweep (non-smoke) first")
     return rows[-1]
+
+
+def check_pallas_row(records: list) -> list:
+    """Tolerate-then-gate the committed fused-engine sweep row.
+
+    Same onboarding pattern as `check_ablation`: while no
+    `sim_backend == "pallas"` row exists the gate is skipped with a note;
+    once one lands it must document the fused engine's contract — a
+    single-trace batched arm and a recorded `speedup_steady` (the honest
+    serial-ref-vs-batched-pallas number; interpret mode on CPU, so only
+    its presence and the trace count are gated, not its magnitude).
+    """
+    rows = [
+        r for r in records
+        if r.get("bench") == "noc_sweep_serial_vs_batched"
+        and r.get("sim_backend") == "pallas"
+    ]
+    if not rows:
+        print("pallas sweep: no committed sim_backend=pallas row yet — "
+              "tolerated (run benchmarks.bench_sweep --backend pallas "
+              "non-smoke to add one)")
+        return []
+    row = rows[-1]
+    failures = []
+    if row.get("batched_traces") != 1:
+        failures.append(
+            "pallas regression: committed fused-engine row traced simulate "
+            f"{row.get('batched_traces')}x (contract: the one shared "
+            "program per backend)"
+        )
+    if "speedup_steady" not in row:
+        failures.append(
+            "pallas regression: committed fused-engine row lacks "
+            "speedup_steady (bench must record the honest steady number)"
+        )
+    return failures
 
 
 def check_ablation(records: list) -> list:
@@ -175,6 +227,7 @@ def main(argv=None) -> int:
         gate_steady=args.grid == "full",
     )
     failures += check_ablation(records)
+    failures += check_pallas_row(records)
     if failures:
         for failure in failures:
             print(f"BENCH REGRESSION: {failure}", file=sys.stderr)

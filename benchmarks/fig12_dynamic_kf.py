@@ -49,8 +49,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the two-arm batch across N devices")
+    ap.add_argument("--backend", choices=("ref", "pallas", "pallas_arb"),
+                    default="ref",
+                    help="cycle engine: dense jnp (ref), fused full-cycle "
+                         "lane kernel (pallas), or arbitration-only kernel "
+                         "(pallas_arb); all bitwise-identical")
     args = ap.parse_args(argv)
-    tr = run(devices=args.devices)
+    tr = run(devices=args.devices, backend=args.backend)
     print("epoch,fair_gpu_ipc,kf_gpu_ipc,kf_signal,applied_config")
     for i in range(len(tr["fair_ipc"])):
         print(f"{i},{tr['fair_ipc'][i]:.4f},{tr['kf_ipc'][i]:.4f},"

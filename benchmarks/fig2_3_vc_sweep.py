@@ -47,8 +47,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the sweep batch axis across N devices")
+    ap.add_argument("--backend", choices=("ref", "pallas", "pallas_arb"),
+                    default="ref",
+                    help="cycle engine: dense jnp (ref), fused full-cycle "
+                         "lane kernel (pallas), or arbitration-only kernel "
+                         "(pallas_arb); all bitwise-identical")
     args = ap.parse_args(argv)
-    results = run(devices=args.devices)
+    results = run(devices=args.devices, backend=args.backend)
     print("workload,ratio,gpu_ipc,gpu_ipc_std,cpu_ipc,cpu_ipc_std,avg_latency")
     for wl, row in results.items():
         for ratio, s in row.items():

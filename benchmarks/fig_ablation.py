@@ -145,9 +145,14 @@ def main(argv=None):
                          "phase-shift scenario AND the grid ran single-trace")
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the ablation batch axis across N devices")
+    ap.add_argument("--backend", choices=("ref", "pallas", "pallas_arb"),
+                    default="ref",
+                    help="cycle engine: dense jnp (ref), fused full-cycle "
+                         "lane kernel (pallas), or arbitration-only kernel "
+                         "(pallas_arb); all bitwise-identical")
     args = ap.parse_args(argv)
 
-    n_epochs, overrides = 120, {}
+    n_epochs, overrides = 120, {"backend": args.backend}
     if args.smoke:
         seeds, scenarios = SMOKE["seeds"], SMOKE["scenarios"]
     else:

@@ -113,7 +113,7 @@ def main(argv=None):
 
     _section("Kernel micro-benches (interpret mode)")
     from benchmarks import kernels_bench
-    kernels_bench.main()
+    kernels_bench.main([])  # no --record: aggregator runs never append
 
     _section("Roofline table (from dry-run artifacts)")
     from benchmarks import roofline_table

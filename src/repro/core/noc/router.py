@@ -35,7 +35,13 @@ on CPU and maps directly onto accelerator lanes.
 `arbitrate` is the pure switch-allocation inner loop (VC allocation +
 per-output RR arbitration + grant filtering), shared by the default jnp path
 and the Pallas kernel in `repro.kernels.noc_cycle` (which must agree with it
-bitwise — see tests/test_cycle_engine.py).
+bitwise — see tests/test_cycle_engine.py).  This whole module is also the
+per-stage ORACLE for the fused full-cycle lane kernel
+(`repro.kernels.noc_cycle.fused`, DESIGN.md §13): `router_cycle` and
+`inject_all` each have a lane twin (`router_stage_lanes`, `inject_lanes`)
+that must reproduce them bitwise — including the garbage-value conventions
+on ungranted outputs — so any semantic change here must land in the twin in
+the same commit.
 """
 from __future__ import annotations
 

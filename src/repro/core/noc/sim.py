@@ -112,9 +112,10 @@ class SimStatic:
     z_scales: tuple[float, float, float]
     kf_q: float
     kf_r: float
-    # cycle-engine knobs (DESIGN.md §11): scan unroll factor for the inner
-    # cycle loop, and which arbitration backend to trace ("ref" = dense jnp,
-    # "pallas" = the repro.kernels.noc_cycle lane kernel).
+    # cycle-engine knobs (DESIGN.md §11, §13): scan unroll factor for the
+    # inner cycle loop, and which engine to trace ("ref" = dense jnp,
+    # "pallas" = the fused full-cycle repro.kernels.noc_cycle lane kernel,
+    # "pallas_arb" = dense body with only arbitration on the lane kernel).
     cycle_unroll: int = 1
     backend: str = "ref"
     # injection-stamp dtype: "auto" picks uint16 whenever every age the run
@@ -147,7 +148,7 @@ class NoCConfig:
     kf_r: float = 2e-1
     seed: int = 0
     cycle_unroll: int = 1         # inner cycle-scan unroll factor
-    backend: str = "ref"          # arbitration backend: ref | pallas
+    backend: str = "ref"          # cycle engine: ref | pallas | pallas_arb
     stamp_dtype: str = "auto"     # injection-stamp dtype: auto | int32
     # predictor-ablation knobs (DESIGN.md §12): which bank member drives the
     # hysteresis machine (only meaningful for mode="kf") and the EMA
@@ -366,15 +367,42 @@ def _simulate_impl(
     kf_params = _make_kf(stc)
     z_scales = jnp.asarray(stc.z_scales, jnp.float32)
 
-    # arbitration backend: the dense jnp inner loop, or the Pallas lane
-    # kernel (repro.kernels.noc_cycle, interpret-mode on CPU) — both agree
-    # bitwise (tests/test_cycle_engine.py), so the choice is pure perf.
-    if stc.backend == "pallas":
+    # cycle-engine backend (DESIGN.md §11, §13) — all three agree bitwise
+    # (tests/test_cycle_engine.py), so the choice is pure perf:
+    #   "ref"        — the dense jnp cycle body below.
+    #   "pallas"     — the FUSED full-cycle Pallas kernel: one launch per
+    #                  simulated cycle with the whole carry in lane refs
+    #                  (repro.kernels.noc_cycle, interpret-mode off-TPU).
+    #   "pallas_arb" — dense cycle body with only switch allocation swapped
+    #                  for the arbitration lane kernel (the PR-4 path).
+    fused_engine = stc.backend == "pallas"
+    if stc.backend == "pallas_arb":
         from repro.kernels.noc_cycle.ops import arbitrate_lanes as arb_fn
-    elif stc.backend == "ref":
+    elif stc.backend in ("ref", "pallas"):
         arb_fn = rt.arbitrate
     else:
         raise ValueError(f"unknown cycle-engine backend {stc.backend!r}")
+    if fused_engine:
+        from repro.kernels.noc_cycle import fused as lanes
+        from repro.kernels.noc_cycle import ops as lane_ops
+
+        assert lanes.COUNTER_FIELDS == EpochCounters._fields, (
+            "fused kernel counter lanes out of sync with EpochCounters"
+        )
+        # the lane engine carries stamps as int32 and masks the latency
+        # subtraction instead, reproducing the uint16 wraparound bitwise
+        stamp_mask = 0xFFFF if subnets0.buf_binj.dtype == jnp.uint16 else 0
+        lane_dims = lanes.lane_dims(
+            S=S, R=R, V=V, B=stc.buf_depth, Q=stc.mc_queue_cap,
+            width=topo.width, mc_service_period=stc.mc_service_period,
+            mshr_limit=stc.mshr_limit, bcap=BCAP, stamp_mask=stamp_mask,
+        )
+        route_rows, exists_rows, ntype_row = lanes.run_consts(lane_dims, topo)
+        req_match = (sub_ids[:, None] == req_sub[None, :]) & sub_enabled[:, None]
+        pol_sr, pol_r = lanes.policy_rows(
+            lane_dims, sub_enabled, sub_is_req, sub_is_rep, req_match,
+            fs, n_req_subs,
+        )
 
     def make_want_rep(mc):
         """Want-matrix for staged MC replies (reply subnet of requester
@@ -599,10 +627,41 @@ def _simulate_impl(
             )
             return (subs, mc, phase, outstanding, bl_count, cnt), None
 
-        inner0 = (subs, mc, phase, outst, backlog, _zero_counters())
-        (subs, mc, phase, outst, backlog, cnt), _ = jax.lax.scan(
-            cycle_body, inner0, xs, unroll=stc.cycle_unroll
-        )
+        if fused_engine:
+            # ---- fused path (DESIGN.md §13): pack the carry into lane
+            # layout once per epoch, run ONE pallas_call per cycle with the
+            # whole state in kernel refs, unpack at the epoch boundary.
+            # Everything outside the cycle scan (prologue inject, RNG, KF,
+            # policy) is byte-for-byte the dense engine's code above/below.
+            gm_rows, cm_rows = lanes.mask_rows(lane_dims, g_vec, c_vec)
+            pr_rows = lanes.prof_rows(prof)
+            xi, xf = lanes.cycle_xs(
+                lane_dims, cycles, u_phase, u_gen, dests_all, sa_all,
+                active_all, rep_gate,
+            )
+            ls0 = lanes.pack_state(lane_dims, subs, mc, outst, backlog, phase)
+
+            def fused_cycle(ls, x):
+                ls = lane_ops.fused_cycle_step(
+                    lane_dims, ls, x[0], x[1], gm_rows, cm_rows, pr_rows,
+                    pol_sr, pol_r, ntype_row, route_rows, exists_rows,
+                )
+                return ls, None
+
+            ls, _ = jax.lax.scan(
+                fused_cycle, ls0, (xi, xf), unroll=stc.cycle_unroll
+            )
+            subs, mc, outst, backlog, phase = lanes.unpack_state(
+                lane_dims, ls, MCState, subnets0.buf_binj.dtype
+            )
+            cnt = EpochCounters(
+                *(ls.cnt[0, i] for i in range(lanes.N_COUNTERS))
+            )
+        else:
+            inner0 = (subs, mc, phase, outst, backlog, _zero_counters())
+            (subs, mc, phase, outst, backlog, cnt), _ = jax.lax.scan(
+                cycle_body, inner0, xs, unroll=stc.cycle_unroll
+            )
         cycle = cycle0 + jnp.int32(stc.epoch_len)
 
         # ---- KF epoch update (paper §3.2)
@@ -706,9 +765,10 @@ def simulate(
     With ``padded=True`` (default) every mode runs the shared S/V-padded
     program; ``padded=False`` compiles the mode's dedicated trace, kept so
     the equivalence tests can pin padded == dedicated bit-for-bit.
-    ``backend`` overrides the config's arbitration backend ("ref" | "pallas",
-    see DESIGN.md §11); each backend is its own `SimStatic`, so opting into
-    the Pallas path never perturbs the default program's trace count.
+    ``backend`` overrides the config's cycle-engine backend ("ref" |
+    "pallas" | "pallas_arb", see DESIGN.md §11/§13 — "pallas" is the fused
+    full-cycle lane kernel); each backend is its own `SimStatic`, so opting
+    into a Pallas path never perturbs the default program's trace count.
     """
     stc = cfg.static_spec(padded)
     if backend is not None:

@@ -1,0 +1,10 @@
+"""noc_cycle: Pallas lane kernels for the NoC cycle engine.
+
+* `ref`    — the dense-jnp oracle (`router.arbitrate` et al.);
+* `kernel` — the pallas_call launch shapes (arbitration-only and the
+  fused full-cycle kernel, DESIGN.md §11/§13);
+* `fused`  — lane layout, stage twins, and pack/unpack for the fused
+  engine;
+* `ops`    — dispatch entries (`arbitrate_lanes`, `fused_cycle_step`)
+  with interpret-mode fallback off-TPU.
+"""

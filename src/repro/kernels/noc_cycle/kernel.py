@@ -8,11 +8,15 @@ grant filter — for EVERY (subnet, router) pair at once.  The pairs ride the
 ports, V virtual channels) ride sublanes with the port/VC loops unrolled at
 trace time — every op in the kernel is a 2D (sublane, lane) VPU op.
 
-This is the jax_pallas-facing half of the cycle engine (DESIGN.md §11): the
-dense-jnp `router.arbitrate` is the oracle, `ops.arbitrate_lanes` is the
-`simulate(..., backend="pallas")` entry with interpret-mode fallback off-TPU,
-and the two must agree BITWISE — the packed-min trick, the argmax-of-bool VC
-pick and the garbage-when-ungranted conventions are all mirrored exactly.
+This is the jax_pallas-facing half of the cycle engine (DESIGN.md §11, §13):
+the dense-jnp `router.arbitrate` is the oracle, `ops.arbitrate_lanes` is the
+`simulate(..., backend="pallas_arb")` entry with interpret-mode fallback
+off-TPU, and the two must agree BITWISE — the packed-min trick, the
+argmax-of-bool VC pick and the garbage-when-ungranted conventions are all
+mirrored exactly.  The value-level arbitration body lives in
+`fused.lane_arbitrate` and is shared with `fused_cycle_kernel` — the
+full-cycle kernel that `simulate(..., backend="pallas")` launches once per
+simulated cycle with the whole scan carry in its refs.
 """
 from __future__ import annotations
 
@@ -22,7 +26,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BIG = 1 << 20
+from repro.kernels.noc_cycle import fused
+
+BIG = fused.BIG
 
 
 def _noc_cycle_kernel(
@@ -33,86 +39,27 @@ def _noc_cycle_kernel(
     *,
     depth: int,
 ):
-    PV, _ = valid_ref.shape          # requesters (P*V) x lane block
-    O = rr_ref.shape[0]              # output ports
-    V = gmask_ref.shape[0]           # virtual channels
-    P = PV // V                      # input ports (== O on a crossbar)
-    local = O - 1                    # PORT_L is the last port by convention
-
-    valid = valid_ref[...] != 0
-    cls = cls_ref[...]
-    op = out_port_ref[...]
-    sa = sa_ref[...]                                   # (1, L)
-    accept = accept_ref[...] != 0
-    active = active_ref[...] != 0
-    gmask = gmask_ref[...] != 0                        # (V, L)
-    cmask = cmask_ref[...] != 0
-
-    pv_iota = jax.lax.broadcasted_iota(jnp.int32, valid.shape, 0)
-    v_iota = jax.lax.broadcasted_iota(jnp.int32, gmask.shape, 0)
-    is_pref = (cls == sa) | (sa < 0)
-    penalty = jnp.where(is_pref, 0, PV)                # (PV, L)
-
-    grants, winners, down_vcs, new_rrs = [], [], [], []
-    any_reqs, w_clss, w_ports, sel_ohs = [], [], [], []
-    for o in range(O):
-        req_o = valid & (op == o)                      # (PV, L)
-        rr_o = rr_ref[o:o + 1, :]                      # (1, L)
-        key = (pv_iota - rr_o) % PV + penalty
-        # the empty-column sentinel must be a multiple of PV so the garbage
-        # winner (% PV) is 0, exactly like the reference's packed min
-        packed = jnp.where(req_o, key * PV + pv_iota, PV * (1 << 14))
-        win_o = jnp.min(packed, axis=0, keepdims=True) % PV
-        any_o = jnp.any(req_o, axis=0, keepdims=True)
-        sel_o = pv_iota == win_o                       # (PV, L) one-hot
-        wcls_o = jnp.sum(jnp.where(sel_o, cls, 0), axis=0, keepdims=True)
-
-        allowed = jnp.where(wcls_o == 1, gmask, cmask)  # (V, L)
-        dc_o = down_ref[o * V:(o + 1) * V, :]           # (V, L)
-        has = (dc_o < depth) & allowed
-        credit_o = jnp.any(has, axis=0, keepdims=True)
-        first_vc = jnp.min(jnp.where(has, v_iota, V), axis=0, keepdims=True)
-        down_vc_o = jnp.where(credit_o, first_vc, 0)   # argmax-of-bool conv.
-
-        if o == local:
-            grant_o = any_o & accept & active
-        else:
-            exists_o = exists_ref[o:o + 1, :] != 0
-            grant_o = any_o & exists_o & credit_o & active
-
-        grants.append(grant_o)
-        winners.append(win_o)
-        down_vcs.append(down_vc_o)
-        any_reqs.append(any_o)
-        w_clss.append(wcls_o)
-        w_ports.append(win_o // V)
-        sel_ohs.append(sel_o)
-        new_rrs.append((win_o + 1) % PV)
-
-    # one traversal per input port: keep the lowest-output grant per port
-    ranks = [jnp.where(grants[o], o, BIG) for o in range(O)]
-    min_rank = []
-    for p in range(P):
-        mr = jnp.full_like(ranks[0], BIG)
-        for o in range(O):
-            mr = jnp.minimum(mr, jnp.where(w_ports[o] == p, ranks[o], BIG))
-        min_rank.append(mr)
-    deq = jnp.zeros(valid.shape, jnp.int32)
-    for o in range(O):
-        sel_rank = jnp.zeros_like(ranks[o])
-        for p in range(P):
-            sel_rank = sel_rank + jnp.where(w_ports[o] == p, min_rank[p], 0)
-        grants[o] = grants[o] & (ranks[o] == sel_rank)
-        deq = deq | (sel_ohs[o] & grants[o]).astype(jnp.int32)
-        new_rrs[o] = jnp.where(grants[o], new_rrs[o], rr_ref[o:o + 1, :])
-
-    grant_ref[...] = jnp.concatenate(grants, axis=0).astype(jnp.int32)
-    winner_ref[...] = jnp.concatenate(winners, axis=0)
-    down_vc_ref[...] = jnp.concatenate(down_vcs, axis=0)
-    deq_ref[...] = deq
-    new_rr_ref[...] = jnp.concatenate(new_rrs, axis=0)
-    any_req_ref[...] = jnp.concatenate(any_reqs, axis=0).astype(jnp.int32)
-    w_cls_ref[...] = jnp.concatenate(w_clss, axis=0)
+    arb = fused.lane_arbitrate(
+        valid_ref[...] != 0,
+        cls_ref[...],
+        out_port_ref[...],
+        rr_ref[...],
+        down_ref[...],
+        exists_ref[...] != 0,
+        gmask_ref[...] != 0,
+        cmask_ref[...] != 0,
+        sa_ref[...],
+        accept_ref[...] != 0,
+        active_ref[...] != 0,
+        depth=depth,
+    )
+    grant_ref[...] = jnp.concatenate(arb.grant, axis=0).astype(jnp.int32)
+    winner_ref[...] = jnp.concatenate(arb.winner, axis=0)
+    down_vc_ref[...] = jnp.concatenate(arb.down_vc, axis=0)
+    deq_ref[...] = arb.deq
+    new_rr_ref[...] = jnp.concatenate(arb.new_rr, axis=0)
+    any_req_ref[...] = jnp.concatenate(arb.any_req, axis=0).astype(jnp.int32)
+    w_cls_ref[...] = jnp.concatenate(arb.w_cls, axis=0)
 
 
 def noc_cycle_kernel(
@@ -158,3 +105,86 @@ def noc_cycle_kernel(
         interpret=interpret,
     )(valid, cls, out_port, rr_ptr, down_count, down_exists,
       gmask, cmask, sa_pref, accept, active)
+
+
+# ---------------------------------------------------------------------------
+# fused full-cycle kernel: ONE launch per simulated NoC cycle (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _fused_cycle_kernel(
+    xi_ref, xf_ref, gmask_ref, cmask_ref, prof_ref, pol_sr_ref, pol_r_ref,
+    ntype_ref, route_ref, exists_ref,
+    buf_meta_ref, buf_binj_ref, head_ref, count_ref, rr_ref,
+    mcq_ref, mc_ref, node_ref, cnt_ref,
+    o_buf_meta, o_buf_binj, o_head, o_count, o_rr,
+    o_mcq, o_mc, o_node, o_cnt,
+    *,
+    dims: fused.LaneDims,
+):
+    state = fused.LaneState(
+        buf_meta=buf_meta_ref[...],
+        buf_binj=buf_binj_ref[...],
+        head=head_ref[...],
+        count=count_ref[...],
+        rr=rr_ref[...],
+        mcq=mcq_ref[...],
+        mc=mc_ref[...],
+        node=node_ref[...],
+        cnt=cnt_ref[...],
+    )
+    new = fused.cycle_step_lanes(
+        dims, state, xi_ref[...], xf_ref[...],
+        gmask_ref[...], cmask_ref[...], prof_ref[...],
+        pol_sr_ref[...], pol_r_ref[...],
+        ntype_ref[...], route_ref[...], exists_ref[...],
+    )
+    o_buf_meta[...] = new.buf_meta
+    o_buf_binj[...] = new.buf_binj
+    o_head[...] = new.head
+    o_count[...] = new.count
+    o_rr[...] = new.rr
+    o_mcq[...] = new.mcq
+    o_mc[...] = new.mc
+    o_node[...] = new.node
+    o_cnt[...] = new.cnt
+
+
+def fused_cycle_kernel(
+    state: fused.LaneState,
+    xi: jax.Array,       # (XI_ROWS, S*64) int32 — this cycle's xs
+    xf: jax.Array,       # (XF_ROWS, 128) float32
+    gmask: jax.Array,    # (V, S*64) int32 0/1 — epoch VC masks
+    cmask: jax.Array,    # (V, S*64) int32 0/1
+    prof: jax.Array,     # (n_prof, 128) float32 — workload rows
+    pol_sr: jax.Array,   # (PS_ROWS, S*64) int32 — subnet structure
+    pol_r: jax.Array,    # (PR_ROWS, 128) int32
+    ntype: jax.Array,    # (1, 128) int32 — node types (constant)
+    route: jax.Array,    # (R, S*64) int32 — route table (constant)
+    exists: jax.Array,   # (P, S*64) int32 0/1 — link table (constant)
+    *,
+    dims: fused.LaneDims,
+    interpret: bool = False,
+) -> fused.LaneState:
+    """One simulated cycle as ONE pallas_call over the whole lane state.
+
+    Every operand is small enough (< 100 KiB total at the paper's shapes)
+    that the kernel runs as a single full-width block: the grid is (1,) and
+    every BlockSpec covers its operand.  Constant tables arrive as input
+    refs because Pallas kernel bodies may not capture constant arrays.
+    """
+    ins = (xi, xf, gmask, cmask, prof, pol_sr, pol_r, ntype, route, exists)
+    carry = tuple(state)
+
+    def spec(x):
+        return pl.BlockSpec(x.shape, lambda i: (0, 0))
+
+    kernel = functools.partial(_fused_cycle_kernel, dims=dims)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[spec(x) for x in ins + carry],
+        out_specs=[spec(x) for x in carry],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype) for x in carry],
+        interpret=interpret,
+    )(*ins, *carry)
+    return fused.LaneState(*outs)

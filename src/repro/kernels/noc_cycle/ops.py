@@ -1,12 +1,17 @@
-"""Lane-flattening wrapper for the noc_cycle kernel + backend dispatch.
+"""Lane-flattening wrappers for the noc_cycle kernels + backend dispatch.
 
 `arbitrate_lanes` is signature-compatible with `repro.core.noc.router.
 arbitrate` (the oracle in ref.py): it flattens every leading dimension of
 the router state onto the kernel's lane axis — `(S, R)` for a single run,
 `(B, S, R)` under a batched sweep — pads lanes to the 128-wide block, and
-returns the same `Arbitration` pytree.  Off-TPU it runs the kernel in
-interpret mode (like `repro.kernels.kf_bank`), so `simulate(...,
-backend="pallas")` works everywhere the tests run.
+returns the same `Arbitration` pytree.  It backs
+`simulate(..., backend="pallas_arb")`, the arbitration-only kernel swap.
+
+`fused_cycle_step` is the full-cycle entry behind
+`simulate(..., backend="pallas")`: one `fused_cycle_kernel` launch per
+simulated cycle with the whole scan carry in lane layout (DESIGN.md §13).
+Off-TPU both run in interpret mode (like `repro.kernels.kf_bank`), so every
+backend works everywhere the tests run.
 """
 from __future__ import annotations
 
@@ -14,11 +19,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.noc.router import Arbitration
-from repro.kernels.noc_cycle.kernel import noc_cycle_kernel
+from repro.kernels.noc_cycle import fused
+from repro.kernels.noc_cycle.kernel import fused_cycle_kernel, noc_cycle_kernel
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def fused_cycle_step(
+    dims: fused.LaneDims,
+    state: fused.LaneState,
+    xi: jax.Array, xf: jax.Array,
+    gmask: jax.Array, cmask: jax.Array, prof: jax.Array,
+    pol_sr: jax.Array, pol_r: jax.Array,
+    ntype: jax.Array, route: jax.Array, exists: jax.Array,
+) -> fused.LaneState:
+    """One fused simulated cycle (interpret-mode fallback off-TPU)."""
+    return fused_cycle_kernel(
+        state, xi, xf, gmask, cmask, prof, pol_sr, pol_r,
+        ntype, route, exists,
+        dims=dims, interpret=_interpret(),
+    )
 
 
 def arbitrate_lanes(

@@ -1,11 +1,14 @@
-"""Oracle for the noc_cycle kernel: the production dense-jnp switch
-allocator from `repro.core.noc.router`.
+"""Oracle for the noc_cycle kernels: the production dense-jnp engine in
+`repro.core.noc`.
 
-`router.arbitrate` IS the reference — the simulator's default backend runs
-it directly, and the Pallas lane kernel in `kernel.py` must agree with it
-bitwise on every output (grant/winner/down_vc/deq/new_rr/any_req/w_cls);
-tests/test_cycle_engine.py pins that on random router states and on a full
-`router_cycle` step."""
+`router.arbitrate` IS the arbitration reference — the simulator's default
+backend runs it directly, and the Pallas lane kernel in `kernel.py` must
+agree with it bitwise on every output (grant/winner/down_vc/deq/new_rr/
+any_req/w_cls); tests/test_cycle_engine.py pins that on random router
+states and on a full `router_cycle` step.  The fused full-cycle kernel
+(`fused.py`, DESIGN.md §13) widens the oracle to the whole dense
+`sim.cycle_body` — `router.router_cycle`/`inject_all` and the MC/counter
+stages are its per-stage references, pinned by the same test module."""
 from __future__ import annotations
 
 from repro.core.noc.router import Arbitration, arbitrate

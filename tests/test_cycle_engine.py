@@ -296,7 +296,304 @@ def test_simulate_pallas_backend_runs_fig2_3_smoke():
         )
 
 
+def test_simulate_pallas_arb_backend_matches_ref():
+    """`backend="pallas_arb"` (dense body + arbitration lane kernel — the
+    pre-fusion Pallas path) still reproduces the ref engine bit-for-bit,
+    and each backend compiles exactly one program (its own `SimStatic`)."""
+    tiny = dict(n_epochs=2, epoch_len=40)
+    cfg = NoCConfig(mode="static", static_gpu_vcs=3, **tiny)
+    sim.reset_trace_count()
+    ref = sim.simulate(cfg, PROFILES["PATH"])
+    pal = sim.simulate(cfg, PROFILES["PATH"], backend="pallas_arb")
+    # at most one trace per backend (jit cache hits from earlier tests on
+    # the same SimStatic may make it fewer, never more)
+    assert sim.trace_count() <= 2
+    for (path, a), (_, b) in zip(
+        jax.tree_util.tree_leaves_with_path(ref),
+        jax.tree_util.tree_leaves_with_path(pal),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"leaf {jax.tree_util.keystr(path)}",
+        )
+
+
 def test_unknown_backend_rejected():
     cfg = NoCConfig(mode="baseline", n_epochs=1, epoch_len=10)
     with pytest.raises(ValueError, match="backend"):
         sim.simulate(cfg, PROFILES["PATH"], backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# 4. fused full-cycle kernel (DESIGN.md §13): golden pinning + stage twins
+# ---------------------------------------------------------------------------
+
+def _lane_dims(S=4, V=4, B=4):
+    from repro.kernels.noc_cycle import fused
+
+    return fused.lane_dims(
+        S=S, R=36, V=V, B=B, Q=16, width=6, mc_service_period=2,
+        mshr_limit=16, bcap=64, stamp_mask=0xFFFF,
+    )
+
+
+def _sv_mask_rows(x):
+    """Per-subnet (S, V) bool masks -> (V, S*64) int32 lane rows (more
+    general than the engine's own subnet-uniform masks — the stage twins
+    must honor per-lane variation)."""
+    from repro.kernels.noc_cycle import fused
+
+    S, V = x.shape
+    return jnp.concatenate(
+        [
+            jnp.broadcast_to(x[s].astype(jnp.int32)[:, None], (V, fused.R_PAD))
+            for s in range(S)
+        ],
+        axis=1,
+    )
+
+
+def _sr_row(x, R=36):
+    """(S, R) -> (1, S*64) int32 lane row."""
+    from repro.kernels.noc_cycle import fused
+
+    x = jnp.pad(x.astype(jnp.int32), ((0, 0), (0, fused.R_PAD - R)))
+    return x.reshape(1, -1)
+
+
+def test_fused_backend_matches_golden_capture():
+    """The fused kernel runs the golden grid (static/baseline/4subnet/kf x
+    workloads) bitwise-identical to the PR-3 capture — the engine-level
+    acceptance gate for `backend="pallas"`."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    for key, g in golden.items():
+        mode, wl, gs, ss = key.split("/")
+        cfg = NoCConfig(mode=mode, static_gpu_vcs=int(gs[1:]),
+                        seed=int(ss[1:]), **FAST)
+        res = sim.simulate(cfg, PROFILES[wl], backend="pallas")
+        sums = {n: int(np.sum(np.asarray(leaf)))
+                for n, leaf in zip(res.counters._fields, res.counters)}
+        assert sums == g["counter_sums"], f"{key}: fused counter drift"
+        assert np.asarray(res.applied_config).tolist() == g["applied_config"]
+        assert np.asarray(res.kf_signal).tolist() == g["kf_signal"]
+        np.testing.assert_allclose(
+            float(np.asarray(res.avg_latency)[-1]), g["avg_latency_last"],
+            rtol=0, atol=1e-6, err_msg=key,
+        )
+
+
+def test_fused_pack_unpack_roundtrip():
+    """Lane pack -> unpack is the identity on every carry leaf (localizes
+    layout/transpose bugs away from the stage math)."""
+    from repro.kernels.noc_cycle import fused
+
+    rng = np.random.default_rng(5)
+    d = _lane_dims()
+    R, Q = 36, 16
+    subs = _random_subnet_state(rng)
+    mc = sim.MCState(
+        q_meta=jnp.asarray(rng.integers(0, 100, (R, Q)), jnp.int8),
+        head=jnp.asarray(rng.integers(0, Q, (R,)), jnp.int32),
+        count=jnp.asarray(rng.integers(0, Q + 1, (R,)), jnp.int32),
+        timer=jnp.asarray(rng.integers(0, 3, (R,)), jnp.int32),
+        stage_valid=jnp.asarray(rng.random((R,)) < 0.5),
+        stage_dst=jnp.asarray(rng.integers(0, R, (R,)), jnp.int32),
+        stage_cls=jnp.asarray(rng.integers(0, 2, (R,)), jnp.int32),
+    )
+    outst = jnp.asarray(rng.integers(0, 16, (R,)), jnp.int32)
+    backlog = jnp.asarray(rng.integers(0, 64, (R,)), jnp.int32)
+    phase = jnp.int32(1)
+
+    ls = fused.pack_state(d, subs, mc, outst, backlog, phase)
+    subs2, mc2, outst2, backlog2, phase2 = fused.unpack_state(
+        d, ls, sim.MCState, subs.buf_binj.dtype
+    )
+    _states_equal(subs, subs2)
+    _states_equal(mc, mc2)
+    np.testing.assert_array_equal(np.asarray(outst), np.asarray(outst2))
+    np.testing.assert_array_equal(np.asarray(backlog), np.asarray(backlog2))
+    assert int(phase2) == int(phase)
+
+
+def test_fused_inject_stage_matches_inject_all():
+    """`fused.inject_lanes` == `router.inject_all` on random states with
+    per-subnet VC masks: buffer writes, counts, and the ok row."""
+    from repro.kernels.noc_cycle import fused
+
+    rng = np.random.default_rng(13)
+    d = _lane_dims()
+    S, R, V = 4, 36, 4
+    subs = _random_subnet_state(rng)
+    want = jnp.asarray(rng.random((S, R)) < 0.6)
+    dest = jnp.asarray(rng.integers(0, R, (S, R)), jnp.int32)
+    src = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32), (S, R))
+    cls = jnp.asarray(rng.integers(0, 2, (S, R)), jnp.int32)
+    binj = jnp.asarray(rng.integers(0, 5000, (S, R)), jnp.int32)
+    gmask = jnp.asarray(rng.random((S, V)) < 0.7)
+    cmask = jnp.asarray(rng.random((S, V)) < 0.7)
+
+    ref_state, ref_ok = rt.inject_all(
+        subs, want, dest, src, cls, binj, gmask, cmask
+    )
+
+    ls = fused.pack_state(
+        d, subs,
+        sim.MCState(*[jnp.zeros((R, 16), jnp.int8)]
+                    + [jnp.zeros((R,), jnp.int32)] * 3
+                    + [jnp.zeros((R,), bool)]
+                    + [jnp.zeros((R,), jnp.int32)] * 2),
+        jnp.zeros((R,), jnp.int32), jnp.zeros((R,), jnp.int32), jnp.int32(0),
+    )
+    src_lane = jax.lax.broadcasted_iota(jnp.int32, (1, d.lanes_sr), 1) % 64
+    bm, bb, ct, ok = fused.inject_lanes(
+        d, ls.buf_meta, ls.buf_binj, ls.head, ls.count,
+        _sr_row(want) != 0, _sr_row(dest), src_lane, _sr_row(cls),
+        _sr_row(binj), _sv_mask_rows(gmask) != 0, _sv_mask_rows(cmask) != 0,
+    )
+    lane_state, *_ = fused.unpack_state(
+        d, ls._replace(buf_meta=bm, buf_binj=bb, count=ct),
+        sim.MCState, subs.buf_binj.dtype,
+    )
+    _states_equal(ref_state, lane_state)
+    ok_sr = np.asarray(ok).reshape(S, 64)[:, :R]
+    np.testing.assert_array_equal(ok_sr, np.asarray(ref_ok))
+
+
+def test_fused_mc_service_stage_matches_dense():
+    """`fused.mc_service_lanes` == the dense cycle_body MC-service stage
+    (timers, queue-head unpack, ring advance, staging)."""
+    from repro.kernels.noc_cycle import fused
+
+    rng = np.random.default_rng(17)
+    d = _lane_dims()
+    topo = make_topology()
+    R, Q, period = topo.n_routers, 16, 2
+    ntype = jnp.asarray(topo.node_type)
+    is_mc = ntype == 2
+    mc = sim.MCState(
+        q_meta=jnp.asarray(rng.integers(0, 100, (R, Q)), jnp.int8),
+        head=jnp.asarray(rng.integers(0, Q, (R,)), jnp.int32),
+        count=jnp.asarray(rng.integers(0, Q + 1, (R,)), jnp.int32),
+        timer=jnp.asarray(rng.integers(0, 3, (R,)), jnp.int32),
+        stage_valid=jnp.asarray(rng.random((R,)) < 0.3),
+        stage_dst=jnp.asarray(rng.integers(0, R, (R,)), jnp.int32),
+        stage_cls=jnp.asarray(rng.integers(0, 2, (R,)), jnp.int32),
+    )
+
+    # dense twin: cycle_body stage 1 verbatim
+    can_serve = is_mc & (mc.count > 0) & ~mc.stage_valid
+    timer = jnp.where(can_serve, jnp.maximum(mc.timer - 1, 0), mc.timer)
+    done = can_serve & (timer == 0)
+    q_head = jnp.take_along_axis(
+        mc.q_meta, mc.head[:, None], axis=1
+    )[:, 0].astype(jnp.int32)
+    src_out = q_head & ((1 << rt.META_SRC_SHIFT) - 1)
+    cls_out = q_head >> rt.META_SRC_SHIFT
+    ref = sim.MCState(
+        q_meta=mc.q_meta,
+        head=jnp.where(done, (mc.head + 1) % Q, mc.head),
+        count=mc.count - done.astype(jnp.int32),
+        timer=jnp.where(done, period, timer),
+        stage_valid=mc.stage_valid | done,
+        stage_dst=jnp.where(done, src_out, mc.stage_dst),
+        stage_cls=jnp.where(done, cls_out, mc.stage_cls),
+    )
+
+    ls = fused.pack_state(
+        d, _random_subnet_state(rng), mc,
+        jnp.zeros((R,), jnp.int32), jnp.zeros((R,), jnp.int32), jnp.int32(0),
+    )
+    ntype_row = jnp.pad(ntype, (0, 128 - R), constant_values=-1)[None, :]
+    head, count, timer_l, svalid, sdst, scls = fused.mc_service_lanes(
+        d, ls.mc, ls.mcq, ntype_row
+    )
+    for name, ref_v, lane_row in [
+        ("head", ref.head, head), ("count", ref.count, count),
+        ("timer", ref.timer, timer_l),
+        ("stage_valid", ref.stage_valid, svalid),
+        ("stage_dst", ref.stage_dst, sdst),
+        ("stage_cls", ref.stage_cls, scls),
+    ]:
+        np.testing.assert_array_equal(
+            np.asarray(ref_v).astype(np.int32),
+            np.asarray(lane_row)[0, :R].astype(np.int32),
+            err_msg=f"mc service field {name}",
+        )
+
+
+def test_fused_router_stage_matches_router_cycle():
+    """`fused.router_stage_lanes` == `router.router_cycle` on random states:
+    buffer dequeue/enqueue writes, RR pointers, and every event field
+    (including the garbage-site convention on eject_src/cls/binj)."""
+    from repro.kernels.noc_cycle import fused
+
+    rng = np.random.default_rng(23)
+    d = _lane_dims()
+    topo = make_topology()
+    R = topo.n_routers
+    route_t, nb_t, opp_t, _, _ = rt.device_tables(topo)
+    S, V = 4, 4
+    subs = _random_subnet_state(rng)
+    gmask = jnp.asarray(rng.random((S, V)) < 0.7)
+    cmask = jnp.asarray(rng.random((S, V)) < 0.7)
+    sa = jnp.int32(1)
+    accept = jnp.asarray(rng.random((S, R)) < 0.8)
+    active = jnp.asarray([True, True, False, True])
+
+    ref_state, ref_ev = rt.router_cycle(
+        subs, route_t, nb_t, opp_t, gmask, cmask, sa, accept, active
+    )
+
+    ls = fused.pack_state(
+        d, subs,
+        sim.MCState(*[jnp.zeros((R, 16), jnp.int8)]
+                    + [jnp.zeros((R,), jnp.int32)] * 3
+                    + [jnp.zeros((R,), bool)]
+                    + [jnp.zeros((R,), jnp.int32)] * 2),
+        jnp.zeros((R,), jnp.int32), jnp.zeros((R,), jnp.int32), jnp.int32(0),
+    )
+    route_rows, exists_rows, _ = fused.run_consts(d, topo)
+    active_rows = jnp.repeat(active.astype(jnp.int32), fused.R_PAD)[None, :]
+    sa_row = jnp.full((1, d.lanes_sr), sa, jnp.int32)
+    (bm, bb, hd, ct, rr2, ej, e_src, e_cls, e_binj, moved, dram_gpu
+     ) = fused.router_stage_lanes(
+        d, ls.buf_meta, ls.buf_binj, ls.head, ls.count, ls.rr,
+        _sv_mask_rows(gmask) != 0, _sv_mask_rows(cmask) != 0,
+        sa_row, _sr_row(accept) != 0, active_rows != 0,
+        route_rows, exists_rows != 0,
+    )
+    lane_state, *_ = fused.unpack_state(
+        d, ls._replace(buf_meta=bm, buf_binj=bb, head=hd, count=ct, rr=rr2),
+        sim.MCState, subs.buf_binj.dtype,
+    )
+    _states_equal(ref_state, lane_state)
+
+    def sr(row):
+        return np.asarray(row).reshape(S, 64)[:, :R]
+
+    np.testing.assert_array_equal(sr(ej), np.asarray(ref_ev.eject_valid))
+    np.testing.assert_array_equal(sr(e_src), np.asarray(ref_ev.eject_src))
+    np.testing.assert_array_equal(sr(e_cls), np.asarray(ref_ev.eject_cls))
+    np.testing.assert_array_equal(
+        sr(e_binj), np.asarray(ref_ev.eject_binj).astype(np.int32)
+    )
+    assert int(moved) == int(ref_ev.moved)
+    assert int(dram_gpu) == int(ref_ev.dram_block_gpu)
+
+
+def test_fused_single_cycle_counters_match_ref():
+    """One-cycle runs pin the counter-update stage: every EpochCounters
+    lane agrees with the dense engine after exactly one simulated cycle
+    (and after three, covering the carry add)."""
+    for mode, ep_len in [("kf", 1), ("4subnet", 1), ("kf", 3)]:
+        cfg = NoCConfig(mode=mode, n_epochs=1, epoch_len=ep_len, seed=3)
+        ref = sim.simulate(cfg, PROFILES["BFS"])
+        pal = sim.simulate(cfg, PROFILES["BFS"], backend="pallas")
+        for name, a, b in zip(
+            ref.counters._fields, ref.counters, pal.counters
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{mode}/L{ep_len}: counter {name}",
+            )
