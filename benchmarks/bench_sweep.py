@@ -228,14 +228,16 @@ def run_sharded(cfgs, profs, devices: int, batched_res,
 
 
 def append_record(rec: dict, path: str = BENCH_PATH) -> None:
-    records = []
-    if os.path.exists(path):
-        with open(path) as f:
-            records = json.load(f)
-    records.append(rec)
-    with open(path, "w") as f:
-        json.dump(records, f, indent=2)
-        f.write("\n")
+    """Append a bench row via the run ledger (repro.obs.ledger).
+
+    Every driver in benchmarks/ funnels through here, so the ledger is the
+    single append path: rows get stamped with provenance (git sha, device
+    kind, ledger_version), schema-validated before the write, and mirrored
+    to the gitignored LEDGER_noc.jsonl next to BENCH_noc.json.
+    """
+    from repro.obs import ledger
+
+    ledger.append(rec, path=path)
 
 
 def main(argv=None):
@@ -252,10 +254,17 @@ def main(argv=None):
                     default="ref",
                     help="cycle engine for the batched arm (serial arms "
                          "always time the dense ref engine)")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="capture one jax.profiler trace of the whole run "
+                         "into DIR (the harness already separates compile "
+                         "vs steady phases internally)")
     args = ap.parse_args(argv)
-    rec = run(n_epochs=args.epochs, epoch_len=args.epoch_len,
-              seeds=tuple(range(args.seeds)), smoke=args.smoke,
-              devices=args.devices, sim_backend=args.backend)
+    from repro.obs import profiling
+
+    with profiling.trace(args.profile, "bench_sweep"):
+        rec = run(n_epochs=args.epochs, epoch_len=args.epoch_len,
+                  seeds=tuple(range(args.seeds)), smoke=args.smoke,
+                  devices=args.devices, sim_backend=args.backend)
     sharded = rec.pop("sharded", None)
     print(json.dumps(rec, indent=2))
     if sharded is not None:

@@ -41,6 +41,13 @@ guarded the same way via `check_pallas_row`: they never become the ref
 baseline, and once one is committed it must show a single-trace batched
 arm with a recorded steady speedup.
 
+Since the run-ledger PR (DESIGN.md §14) two more gates run over the
+committed rows: every row is validated against the ledger schema
+(`check_ledger_schema` — hard for `ledger_version`-stamped rows, tolerant
+for pre-ledger history), and the `noc_obs` flight-recorder row, once
+committed, must keep its probe-overhead measurement and one-trace-per-
+probe-setting contract (`check_obs_row`).
+
     PYTHONPATH=src python -m benchmarks.check_bench [--grid smoke|full]
 
 Exit code 0 = within tolerance, 1 = regression (message says which gate).
@@ -117,6 +124,69 @@ def check_pallas_row(records: list) -> list:
             "pallas regression: committed fused-engine row lacks "
             "speedup_steady (bench must record the honest steady number)"
         )
+    return failures
+
+
+def check_ledger_schema(records: list) -> list:
+    """Validate every committed BENCH row against the ledger schema.
+
+    Tolerate-then-gate along the ROW axis: rows written before the ledger
+    (no `ledger_version`) only get the core check (bench/timestamp/backend
+    present and typed) and a failing legacy row is tolerated with a note —
+    rewriting history to satisfy a new schema is not this gate's job.
+    Rows stamped by `repro.obs.ledger.append` are hard-gated on the full
+    schema: a malformed stamped row means the single-append-path contract
+    broke.
+    """
+    from repro.obs import ledger
+
+    failures, legacy_bad = [], 0
+    for i, row in enumerate(records):
+        stamped = isinstance(row, dict) and "ledger_version" in row
+        problems = ledger.validate_row(row)
+        if not problems:
+            continue
+        if stamped:
+            failures += [
+                f"ledger schema: row {i} "
+                f"({row.get('bench', '?')}): {p}" for p in problems
+            ]
+        else:
+            legacy_bad += 1
+    if legacy_bad:
+        print(f"ledger schema: {legacy_bad} pre-ledger row(s) with core-"
+              "schema gaps — tolerated (no ledger_version stamp)")
+    return failures
+
+
+def check_obs_row(records: list) -> list:
+    """Tolerate-then-gate the committed `noc_obs` flight-recorder row.
+
+    Same onboarding pattern as `check_ablation`: absent -> tolerated with
+    a note; present -> it must document the probe contract — recorded
+    probe overhead (steady-time ratio probes-on/off) and a single trace
+    for each of the probes-off and probes-on programs.
+    """
+    rows = [r for r in records if r.get("bench") == "noc_obs"]
+    if not rows:
+        print("noc_obs: no committed flight-recorder row yet — tolerated "
+              "(run benchmarks.noc_trace --record to add one)")
+        return []
+    row = rows[-1]
+    failures = []
+    overhead = row.get("probe_overhead_steady")
+    if not isinstance(overhead, (int, float)) or overhead <= 0:
+        failures.append(
+            "obs regression: committed noc_obs row lacks a positive "
+            f"probe_overhead_steady (got {overhead!r})"
+        )
+    for field in ("traces_off", "traces_on"):
+        if row.get(field) != 1:
+            failures.append(
+                f"obs regression: committed noc_obs row has {field}="
+                f"{row.get(field)!r} (contract: one compiled program per "
+                "probe setting)"
+            )
     return failures
 
 
@@ -228,6 +298,8 @@ def main(argv=None) -> int:
     )
     failures += check_ablation(records)
     failures += check_pallas_row(records)
+    failures += check_ledger_schema(records)
+    failures += check_obs_row(records)
     if failures:
         for failure in failures:
             print(f"BENCH REGRESSION: {failure}", file=sys.stderr)

@@ -54,8 +54,17 @@ def main(argv=None):
                     help="cycle engine: dense jnp (ref), fused full-cycle "
                          "lane kernel (pallas), or arbitration-only kernel "
                          "(pallas_arb); all bitwise-identical")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="capture jax.profiler traces (compile + steady "
+                         "phases) into DIR")
     args = ap.parse_args(argv)
-    tr = run(devices=args.devices, backend=args.backend)
+    from repro.obs import profiling
+
+    tr = profiling.profiled_run(
+        args.profile,
+        lambda: run(devices=args.devices, backend=args.backend),
+        label="fig12",
+    )
     print("epoch,fair_gpu_ipc,kf_gpu_ipc,kf_signal,applied_config")
     for i in range(len(tr["fair_ipc"])):
         print(f"{i},{tr['fair_ipc'][i]:.4f},{tr['kf_ipc'][i]:.4f},"

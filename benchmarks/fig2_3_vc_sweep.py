@@ -52,8 +52,17 @@ def main(argv=None):
                     help="cycle engine: dense jnp (ref), fused full-cycle "
                          "lane kernel (pallas), or arbitration-only kernel "
                          "(pallas_arb); all bitwise-identical")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="capture jax.profiler traces (compile + steady "
+                         "phases) into DIR")
     args = ap.parse_args(argv)
-    results = run(devices=args.devices, backend=args.backend)
+    from repro.obs import profiling
+
+    results = profiling.profiled_run(
+        args.profile,
+        lambda: run(devices=args.devices, backend=args.backend),
+        label="fig2_3",
+    )
     print("workload,ratio,gpu_ipc,gpu_ipc_std,cpu_ipc,cpu_ipc_std,avg_latency")
     for wl, row in results.items():
         for ratio, s in row.items():

@@ -21,19 +21,22 @@ from repro.core.noc.traffic import PROFILES
 
 
 def run(workload: str = "PATH", n_epochs: int = 120,
-        seeds: tuple[int, ...] | None = None, devices: int | None = None):
+        seeds: tuple[int, ...] | None = None, devices: int | None = None,
+        **overrides):
     if seeds is not None or devices is not None:
         import jax
 
         seeds = seeds or (0,)
-        cfgs = [NoCConfig(mode="baseline", n_epochs=n_epochs, seed=s)
+        cfgs = [NoCConfig(mode="baseline", n_epochs=n_epochs, seed=s,
+                          **overrides)
                 for s in seeds]
         batch_tile = None if devices is not None else SWEEP_TILE
         batch = simulate_batch(cfgs, PROFILES[workload],
                                batch_tile=batch_tile, devices=devices)
         res = jax.tree.map(lambda x: x[0], batch)
     else:
-        res = run_workload("baseline", workload, n_epochs=n_epochs)
+        res = run_workload("baseline", workload, n_epochs=n_epochs,
+                           **overrides)
     c = res.counters
     return {
         "gpu_inj_rate": np.asarray(res.gpu_inj_rate),
@@ -50,8 +53,22 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=None,
                     help="run the trace through the device-sharded batch path")
+    ap.add_argument("--backend", choices=("ref", "pallas", "pallas_arb"),
+                    default="ref",
+                    help="cycle engine: dense jnp (ref), fused full-cycle "
+                         "lane kernel (pallas), or arbitration-only kernel "
+                         "(pallas_arb); all bitwise-identical")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="capture jax.profiler traces (compile + steady "
+                         "phases) into DIR")
     args = ap.parse_args(argv)
-    tr = run(devices=args.devices)
+    from repro.obs import profiling
+
+    tr = profiling.profiled_run(
+        args.profile,
+        lambda: run(devices=args.devices, backend=args.backend),
+        label="fig4",
+    )
     print("epoch,gpu_inj_rate,gpu_ipc,gpu_stall_icnt,gpu_stall_dram,cpu_push")
     for i in range(len(tr["gpu_ipc"])):
         print(f"{i},{tr['gpu_inj_rate'][i]:.4f},{tr['gpu_ipc'][i]:.4f},"

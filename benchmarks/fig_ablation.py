@@ -150,7 +150,11 @@ def main(argv=None):
                     help="cycle engine: dense jnp (ref), fused full-cycle "
                          "lane kernel (pallas), or arbitration-only kernel "
                          "(pallas_arb); all bitwise-identical")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="capture jax.profiler traces (compile + steady "
+                         "phases) into DIR")
     args = ap.parse_args(argv)
+    from repro.obs import profiling
 
     n_epochs, overrides = 120, {"backend": args.backend}
     if args.smoke:
@@ -158,8 +162,12 @@ def main(argv=None):
     else:
         seeds, scenarios = SEEDS, SCENARIO_SET
 
-    res = run(n_epochs=n_epochs, seeds=seeds, scenarios=scenarios,
-              devices=args.devices, **overrides)
+    res = profiling.profiled_run(
+        args.profile,
+        lambda: run(n_epochs=n_epochs, seeds=seeds, scenarios=scenarios,
+                    devices=args.devices, **overrides),
+        label="fig_ablation",
+    )
     print("scenario,predictor,gpu_ipc,gpu_ipc_std,cpu_ipc,avg_latency,"
           "boost_frac")
     for sc, cells in res["table"].items():

@@ -9,6 +9,12 @@ workload profiles — DESIGN.md §2) and all run on the batched sweep engine
 (mode, workload, ratio, seed) point dispatched in lockstep batches.  The
 roofline table comes from the dry-run artifacts in results/dryrun (run
 repro.launch.dryrun first for the full 40-cell table).
+
+Observability (DESIGN.md §14): each fig driver's own `main` takes
+`--profile DIR` to capture jax.profiler traces of its compile and steady
+phases, and `benchmarks/noc_trace.py` replays probes-on flight-recorder
+captures (per-epoch occupancy / arbitration / MC-queue / KF-internals
+timelines) for any workload or scenario.
 """
 from __future__ import annotations
 

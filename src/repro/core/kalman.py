@@ -105,6 +105,21 @@ def measurement_update(params: KalmanParams, prior: KalmanState, z: Array):
     return KalmanState(x=x_post, p=p_post), innovation
 
 
+def kalman_gain(params: KalmanParams, prior: KalmanState) -> Array:
+    """The gain K = P^ H^T S^-1 the measurement update applied, (n, m).
+
+    `measurement_update` computes but does not return K; the flight
+    recorder (repro.obs, DESIGN.md §14) wants it in the trace.  This
+    recomputes it with the SAME expressions in the same order so XLA
+    CSEs the work inside a traced program and the recorded gain is
+    bitwise the one that weighted the innovation.
+    """
+    h = params.h
+    p_prior = prior.p
+    s = h @ p_prior @ h.T + params.r
+    return jnp.linalg.solve(s, h @ p_prior.T).T
+
+
 def step(
     params: KalmanParams,
     state: KalmanState,

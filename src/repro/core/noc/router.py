@@ -94,6 +94,11 @@ class CycleEvents(NamedTuple):
     moved: Array         # () int32 — switch traversals this cycle (utilization)
     dram_block_gpu: Array  # () int32 — GPU ejections blocked by a full MC queue
     dram_block_cpu: Array  # () int32 — CPU ejections blocked by a full MC queue
+    # flight-recorder probes (repro.obs, DESIGN.md §14): per-router switch
+    # allocation outcomes, summed over output ports.  Dead code (free) when
+    # probes are off; appended last so positional consumers stay valid.
+    grant_cnt: Array     # (S, R) int32 — outputs granted this cycle
+    deny_cnt: Array      # (S, R) int32 — requested outputs refused this cycle
 
 
 class Arbitration(NamedTuple):
@@ -260,6 +265,10 @@ def router_cycle(
         ),
         dram_block_cpu=jnp.sum(
             (blocked_local & (blocked_cls == 0)).astype(jnp.int32)
+        ),
+        grant_cnt=jnp.sum(arb.grant.astype(jnp.int32), axis=-1),
+        deny_cnt=jnp.sum(
+            (arb.any_req & ~arb.grant).astype(jnp.int32), axis=-1
         ),
     )
 

@@ -67,6 +67,7 @@ from repro.core.allocator import (
 from repro.core.noc import metrics
 from repro.core.noc import router as rt
 from repro.core.noc.topology import make_topology
+from repro.obs.probes import ProbeConfig, SimTrace
 from repro.core.noc.traffic import (
     ScenarioSchedule,
     WorkloadProfile,
@@ -123,6 +124,11 @@ class SimStatic:
     # the wide stamps — a test/debug knob the uint16-boundary regression
     # test uses to pin auto == int32 bitwise at the 2^16-cycle boundary.
     stamp_dtype: str = "auto"
+    # flight recorder (repro.obs, DESIGN.md §14): probes off (the default)
+    # leaves the traced program — and so the goldens and trace count —
+    # bit-for-bit unchanged; probes on is its own single trace returning
+    # (SimResult, SimTrace).
+    probe: ProbeConfig = ProbeConfig()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +161,8 @@ class NoCConfig:
     # predictor's smoothing factor.  Traced data — not part of SimStatic.
     predictor: str = "kf"
     ema_alpha: float = 0.5   # the textbook naive-EMA default
+    # flight recorder (repro.obs, DESIGN.md §14) — static, default off
+    probe: ProbeConfig = ProbeConfig()
 
     @property
     def n_subnets(self) -> int:
@@ -188,6 +196,7 @@ class NoCConfig:
             cycle_unroll=self.cycle_unroll,
             backend=self.backend,
             stamp_dtype=self.stamp_dtype,
+            probe=self.probe,
         )
 
     def mode_policy(self, padded: bool = True) -> ModePolicy:
@@ -230,6 +239,29 @@ class EpochCounters(NamedTuple):
 def _zero_counters() -> EpochCounters:
     z = jnp.int32(0)
     return EpochCounters(z, z, z, z, z, z, z, z, z, z, z, z, z, z, z)
+
+
+class _ProbeAcc(NamedTuple):
+    """Dense-engine flight-recorder accumulators (repro.obs, DESIGN.md §14):
+    the per-cycle carry the probes-on cycle scan threads next to the
+    counters.  The fused engine's twin is `fused.ProbeLanes`; both sample
+    END-of-cycle state, so the two agree bitwise."""
+
+    occ: Array      # (S, R, P, V) int32 — summed VC occupancy
+    grant: Array    # (S, R) int32 — switch grants, summed over outputs
+    deny: Array     # (S, R) int32 — refused requests, summed over outputs
+    mcq_sum: Array  # (R,) int32 — summed MC queue depth
+    mcq_max: Array  # (R,) int32 — running max MC queue depth
+
+
+def _zero_probe_acc(S: int, R: int, V: int) -> _ProbeAcc:
+    return _ProbeAcc(
+        occ=jnp.zeros((S, R, rt.N_PORTS, V), jnp.int32),
+        grant=jnp.zeros((S, R), jnp.int32),
+        deny=jnp.zeros((S, R), jnp.int32),
+        mcq_sum=jnp.zeros((R,), jnp.int32),
+        mcq_max=jnp.zeros((R,), jnp.int32),
+    )
 
 
 class SimResult(NamedTuple):
@@ -364,6 +396,11 @@ def _simulate_impl(
 
     subnets0, mc0, outstanding0, backlog0 = state0
 
+    # flight recorder (DESIGN.md §14): a STATIC switch — probes off traces
+    # the exact pre-probe program (the accumulators below are Python-gated,
+    # not lax.cond-gated), probes on is its own single trace.
+    probe_on = stc.probe.enabled
+
     kf_params = _make_kf(stc)
     z_scales = jnp.asarray(stc.z_scales, jnp.float32)
 
@@ -465,7 +502,10 @@ def _simulate_impl(
         xs = (cycles, u_phase, u_gen, dests_all, sa_all, active_all, rep_gate)
 
         def cycle_body(carry, x):
-            subs, mc, phase, outstanding, bl_count, cnt = carry
+            if probe_on:
+                subs, mc, phase, outstanding, bl_count, cnt, prb = carry
+            else:
+                subs, mc, phase, outstanding, bl_count, cnt = carry
             cycle, u_ph, u_gen_c, dests, sa_pref, active, gate = x
 
             # MC acceptance applies to ejections on *request* subnets at MC
@@ -625,6 +665,19 @@ def _simulate_impl(
                 + jnp.sum(gpu_ej.astype(jnp.int32)),
                 moved=cnt.moved + events.moved,
             )
+            if probe_on:
+                # ---- 7. flight-recorder accumulation from END-of-cycle
+                # state (the fused engine samples at the same point)
+                prb = _ProbeAcc(
+                    occ=prb.occ + subs.count.astype(jnp.int32),
+                    grant=prb.grant + events.grant_cnt,
+                    deny=prb.deny + events.deny_cnt,
+                    mcq_sum=prb.mcq_sum + mc.count,
+                    mcq_max=jnp.maximum(prb.mcq_max, mc.count),
+                )
+                return (
+                    subs, mc, phase, outstanding, bl_count, cnt, prb
+                ), None
             return (subs, mc, phase, outstanding, bl_count, cnt), None
 
         if fused_engine:
@@ -648,9 +701,25 @@ def _simulate_impl(
                 )
                 return ls, None
 
-            ls, _ = jax.lax.scan(
-                fused_cycle, ls0, (xi, xf), unroll=stc.cycle_unroll
-            )
+            def fused_cycle_probed(carry, x):
+                ls, pb = carry
+                ls, pb = lane_ops.fused_cycle_step(
+                    lane_dims, ls, x[0], x[1], gm_rows, cm_rows, pr_rows,
+                    pol_sr, pol_r, ntype_row, route_rows, exists_rows,
+                    probe=pb,
+                )
+                return (ls, pb), None
+
+            if probe_on:
+                (ls, pb), _ = jax.lax.scan(
+                    fused_cycle_probed, (ls0, lanes.zero_probe(lane_dims)),
+                    (xi, xf), unroll=stc.cycle_unroll,
+                )
+                prb = _ProbeAcc(*lanes.unpack_probe(lane_dims, pb))
+            else:
+                ls, _ = jax.lax.scan(
+                    fused_cycle, ls0, (xi, xf), unroll=stc.cycle_unroll
+                )
             subs, mc, outst, backlog, phase = lanes.unpack_state(
                 lane_dims, ls, MCState, subnets0.buf_binj.dtype
             )
@@ -659,9 +728,15 @@ def _simulate_impl(
             )
         else:
             inner0 = (subs, mc, phase, outst, backlog, _zero_counters())
-            (subs, mc, phase, outst, backlog, cnt), _ = jax.lax.scan(
-                cycle_body, inner0, xs, unroll=stc.cycle_unroll
-            )
+            if probe_on:
+                inner0 = inner0 + (_zero_probe_acc(S, R, V),)
+                (subs, mc, phase, outst, backlog, cnt, prb), _ = jax.lax.scan(
+                    cycle_body, inner0, xs, unroll=stc.cycle_unroll
+                )
+            else:
+                (subs, mc, phase, outst, backlog, cnt), _ = jax.lax.scan(
+                    cycle_body, inner0, xs, unroll=stc.cycle_unroll
+                )
         cycle = cycle0 + jnp.int32(stc.epoch_len)
 
         # ---- KF epoch update (paper §3.2)
@@ -677,9 +752,14 @@ def _simulate_impl(
         # `mp.predictor.kind` selects which signal drives the hysteresis
         # machine — the KF lane reproduces the legacy
         # `binarize(kalman.step(...).x[0])` bitwise.
-        pred_state, signal = predictor.step(
-            mp.predictor, kf_params, pred_state, z
-        )
+        if probe_on:
+            pred_state, signal, kfi = predictor.step_probed(
+                mp.predictor, kf_params, pred_state, z
+            )
+        else:
+            pred_state, signal = predictor.step(
+                mp.predictor, kf_params, pred_state, z
+            )
         policy = apply_policy_gated(stc.policy, mp, policy, signal, cycle)
 
         # ---- IPC proxies (documented in metrics.py)
@@ -694,6 +774,8 @@ def _simulate_impl(
 
         out = (gpu_ipc, cpu_ipc, avg_lat, signal, policy.config, cnt, inj_rate,
                jnp.sum(g_vec.astype(jnp.int32)))
+        if probe_on:
+            out = (out, (prb, kfi, z))
         return (subs, mc, phase, outst, backlog, policy, pred_state, cycle), out
 
     key0 = jax.random.PRNGKey(seed)
@@ -708,10 +790,11 @@ def _simulate_impl(
         predictor.init_state(),
         jnp.int32(0),
     )
-    _, (gpu_ipc, cpu_ipc, avg_lat, sig, conf, cnt, inj, quota) = jax.lax.scan(
-        epoch_body, carry0, (epoch_keys, profile)
-    )
-    return SimResult(
+    _, outs = jax.lax.scan(epoch_body, carry0, (epoch_keys, profile))
+    if probe_on:
+        outs, (prb, kfi, z_obs) = outs
+    gpu_ipc, cpu_ipc, avg_lat, sig, conf, cnt, inj, quota = outs
+    result = SimResult(
         gpu_ipc=gpu_ipc,
         cpu_ipc=cpu_ipc,
         avg_latency=avg_lat,
@@ -721,6 +804,21 @@ def _simulate_impl(
         gpu_inj_rate=inj,
         gpu_vc_quota=quota,
     )
+    if not probe_on:
+        return result
+    trace = SimTrace(
+        occ_sum=prb.occ,
+        arb_grant=prb.grant,
+        arb_deny=prb.deny,
+        mcq_sum=prb.mcq_sum,
+        mcq_max=prb.mcq_max,
+        kf_innovation=kfi.innovation,
+        kf_gain=kfi.gain,
+        kf_cov_trace=kfi.cov_trace,
+        kf_x_pred=kfi.x_pred,
+        z_obs=z_obs,
+    )
+    return result, trace
 
 
 _SIM_JIT = jax.jit(_simulate_impl, static_argnums=0)
@@ -780,6 +878,24 @@ def simulate(
         jnp.int32(cfg.seed),
         init_sim_state(stc),
     )
+
+
+def simulate_with_trace(
+    cfg: NoCConfig,
+    profile: str | WorkloadProfile | ScenarioSchedule,
+    padded: bool = True,
+    backend: str | None = None,
+) -> tuple[SimResult, SimTrace]:
+    """`simulate` with the flight recorder on: returns (SimResult, SimTrace).
+
+    Forces ``probe.enabled`` — a distinct `SimStatic`, so the probed
+    program is its own single trace and the probes-off program (goldens,
+    sweeps) is never perturbed.  `SimResult` is bitwise the probes-off
+    result; `SimTrace` is bitwise-equal across cycle-engine backends
+    (tests/test_obs.py)."""
+    if not cfg.probe.enabled:
+        cfg = dataclasses.replace(cfg, probe=ProbeConfig(enabled=True))
+    return simulate(cfg, profile, padded=padded, backend=backend)
 
 
 def _tree_rows(tree, sl):

@@ -108,6 +108,52 @@ def init_state(dtype=jnp.float32) -> PredictorState:
     )
 
 
+class KFInternals(NamedTuple):
+    """Flight-recorder view of one epoch-boundary filter step (obs probes,
+    DESIGN.md §14): everything the paper's Fig. 4-style narrative needs to
+    explain WHY the signal flipped."""
+
+    innovation: Array  # (m,) z - H x^  — surprise vs the filter's forecast
+    gain: Array        # (m,) Kalman gain row K[0] that weighted it
+    cov_trace: Array   # () tr(P_k) — posterior uncertainty
+    x_pred: Array      # () one-step demand prediction A x_k (the signal's
+                       #    pre-binarization value for the KF member)
+
+
+def step_probed(
+    pp: PredictorPolicy,
+    kf_params: kalman.KalmanParams,
+    state: PredictorState,
+    z: Array,
+) -> tuple[PredictorState, Array, KFInternals]:
+    """`step` plus the KF internals of the epoch (see KFInternals).
+
+    The extra outputs are pure functions of values `step` already
+    computes (the gain recomputation CSEs against the measurement
+    update), so the (state, signal) pair is bitwise that of `step` —
+    which is in fact implemented as this function minus the internals.
+    """
+    kf_post, kf_prior, innovation = kalman.step(kf_params, state.kf, z)
+    zbar = jnp.mean(z)
+    ema = pp.ema_alpha * zbar + (1.0 - pp.ema_alpha) * state.ema
+
+    x_pred = kalman.one_step_prediction(kf_params, kf_post)[0]
+    sig_kf = kalman.binarize(x_pred, pp.threshold)
+    sig_ema = kalman.binarize(ema, pp.threshold)
+    sig_last = kalman.binarize(zbar, pp.threshold)
+    candidates = jnp.stack(
+        [sig_kf, sig_ema, sig_last, jnp.int32(1), jnp.int32(0)]
+    )
+    signal = jnp.take(candidates, pp.kind)
+    internals = KFInternals(
+        innovation=innovation,
+        gain=kalman.kalman_gain(kf_params, kf_prior)[0],
+        cov_trace=jnp.trace(kf_post.p),
+        x_pred=x_pred,
+    )
+    return PredictorState(kf=kf_post, ema=ema), signal, internals
+
+
 def step(
     pp: PredictorPolicy,
     kf_params: kalman.KalmanParams,
@@ -124,16 +170,5 @@ def step(
     `A x_k` equals the posterior elementwise for the paper's A = I, and the
     `jnp.take` selection is an identity on the chosen lane.
     """
-    kf_post, _, _ = kalman.step(kf_params, state.kf, z)
-    zbar = jnp.mean(z)
-    ema = pp.ema_alpha * zbar + (1.0 - pp.ema_alpha) * state.ema
-
-    x_pred = kalman.one_step_prediction(kf_params, kf_post)[0]
-    sig_kf = kalman.binarize(x_pred, pp.threshold)
-    sig_ema = kalman.binarize(ema, pp.threshold)
-    sig_last = kalman.binarize(zbar, pp.threshold)
-    candidates = jnp.stack(
-        [sig_kf, sig_ema, sig_last, jnp.int32(1), jnp.int32(0)]
-    )
-    signal = jnp.take(candidates, pp.kind)
-    return PredictorState(kf=kf_post, ema=ema), signal
+    new_state, signal, _ = step_probed(pp, kf_params, state, z)
+    return new_state, signal

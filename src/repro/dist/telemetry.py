@@ -60,12 +60,21 @@ class StepTimer:
 
     def step_end(self) -> None:
         if self._t0 is None:
+            # an end without a begin must not leave a ready mark behind to
+            # be attributed to the NEXT step's wait time
+            self._t_ready = None
             return
         now = time.perf_counter()
         dt = max(now - self._t0, 1e-12)
-        wait = (self._t_ready - self._t0) if self._t_ready else 0.0
+        # `is not None`: perf_counter() can legitimately be 0.0 (counter
+        # epoch), and a falsy check would silently drop that wait sample
+        wait = (self._t_ready - self._t0) if self._t_ready is not None else 0.0
         frac = min(max(wait / dt, 0.0), 1.0)
-        self.wait_frac = self._ema * self.wait_frac + (1 - self._ema) * frac
+        # seed the EMA with the first observed fraction instead of decaying
+        # from 0.0, which under-reports stalls for the first ~1/(1-ema) steps
+        self.wait_frac = (frac if self.step_time is None
+                          else self._ema * self.wait_frac
+                          + (1 - self._ema) * frac)
         self.step_time = (dt if self.step_time is None
                           else 0.9 * self.step_time + 0.1 * dt)
         self._t0 = self._t_ready = None

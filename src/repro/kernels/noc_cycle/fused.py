@@ -151,6 +151,30 @@ class LaneState(NamedTuple):
     cnt: Array       # (1, 128) — counter lanes
 
 
+class ProbeLanes(NamedTuple):
+    """Flight-recorder counter lanes (DESIGN.md §14) — an OPTIONAL extra
+    scan carry next to LaneState, present only when `ProbeConfig.enabled`
+    compiled the probed kernel variant.  All int32; accumulated per cycle
+    from END-of-cycle state so the lane engine agrees bitwise with the
+    dense engine's probe accumulators."""
+
+    occ: Array  # (P*V, S*64) — sum over cycles of per-buffer flit count
+    arb: Array  # (2, S*64)   — rows (PB_GRANT, PB_DENY) switch outcomes
+    mcq: Array  # (2, 128)    — rows (PB_MCQ_SUM, PB_MCQ_MAX) queue depth
+
+
+PB_GRANT, PB_DENY = 0, 1
+PB_MCQ_SUM, PB_MCQ_MAX = 0, 1
+
+
+def zero_probe(d: LaneDims) -> ProbeLanes:
+    return ProbeLanes(
+        occ=jnp.zeros((N_PORTS * d.V, d.lanes_sr), jnp.int32),
+        arb=jnp.zeros((2, d.lanes_sr), jnp.int32),
+        mcq=jnp.zeros((2, LANES_R), jnp.int32),
+    )
+
+
 class LaneArb(NamedTuple):
     """Per-output-port arbitration results as lists of (rows, L) blocks.
 
@@ -345,8 +369,11 @@ def router_stage_lanes(
     shift reads are garbage but always masked by `exists` before use.
 
     Returns the updated buffer rows plus the per-lane event rows
-    (ej, eject_src, eject_cls, eject_binj) and the (moved, dram_block_gpu)
-    scalars the counter stage consumes.
+    (ej, eject_src, eject_cls, eject_binj), the (moved, dram_block_gpu)
+    scalars the counter stage consumes, and the per-lane probe rows
+    (grant_cnt, deny_cnt) — switch-allocation outcomes summed over output
+    ports, the lane twin of CycleEvents.grant_cnt/deny_cnt (DESIGN.md
+    §14; dead code when probes are off).
     """
     i32 = jnp.int32
     V, B, P = d.V, d.B, N_PORTS
@@ -420,6 +447,13 @@ def router_stage_lanes(
         (blocked_local & (arb.w_cls[PORT_L] == 1)).astype(i32)
     )
 
+    # --- probe rows: grants and refusals per lane, summed over outputs
+    # (padded lanes have no valid heads -> any_req false -> both stay 0)
+    grant_cnt = sum(arb.grant[o].astype(i32) for o in range(P))
+    deny_cnt = sum(
+        (arb.any_req[o] & ~arb.grant[o]).astype(i32) for o in range(P)
+    )
+
     # --- link traversals as dense pulls through static lane shifts
     tail = (head2 + count2) % B
     new_meta, new_binj, vmask_rows = [], [], []
@@ -450,6 +484,7 @@ def router_stage_lanes(
     return (
         buf_meta2, buf_binj2, head2, count3, rr2,
         ej, eject_src, eject_cls, eject_binj, moved, dram_block_gpu,
+        grant_cnt, deny_cnt,
     )
 
 
@@ -564,12 +599,18 @@ def cycle_step_lanes(
     ntype: Array,   # (1, 128) int32 (padded lanes -1)
     route: Array,   # (R, S*64) int32 — route[dst, lane] table
     exists: Array,  # (P, S*64) int32 0/1 — link exists through port p
-) -> LaneState:
+    probe: ProbeLanes | None = None,
+):
     """ONE full simulated NoC cycle over lanes — the fused kernel body.
 
     Stage order and semantics mirror `sim.cycle_body` exactly; every
     input/output is a 2D (sublane, lane) int32/float32 block so the same
     function traces as a Pallas kernel body and as a plain jitted twin.
+
+    With `probe` (the flight-recorder carry) the return value is
+    (LaneState, ProbeLanes) instead of a bare LaneState; the probed
+    variant is its own compiled program, so the probes-off kernel stays
+    byte-identical to before.
     """
     i32 = jnp.int32
     S, Q = d.S, d.Q
@@ -610,7 +651,8 @@ def cycle_step_lanes(
 
     # ---- 2. route/arbitrate every subnet
     (buf_meta, buf_binj, head, count, rr,
-     ej, eject_src, eject_cls, eject_binj, moved, dram_gpu
+     ej, eject_src, eject_cls, eject_binj, moved, dram_gpu,
+     grant_cnt, deny_cnt,
      ) = router_stage_lanes(
         d, st.buf_meta, st.buf_binj, st.head, st.count, st.rr,
         gmask_b, cmask_b, sa, accept, active, route, exists,
@@ -715,10 +757,26 @@ def cycle_step_lanes(
     node_rows = jnp.concatenate(
         [outstanding, backlog, phase.astype(i32)], axis=0
     )
-    return LaneState(
+    st2 = LaneState(
         buf_meta=buf_meta, buf_binj=buf_binj, head=head, count=count, rr=rr,
         mcq=mcq, mc=mc_rows, node=node_rows, cnt=st.cnt + inc,
     )
+    if probe is None:
+        return st2
+    # ---- 7. flight-recorder accumulation from END-of-cycle state — the
+    # lane twin of the dense engine's ProbeAcc update (sim.cycle_body)
+    probe2 = ProbeLanes(
+        occ=probe.occ + count,
+        arb=probe.arb + jnp.concatenate([grant_cnt, deny_cnt], axis=0),
+        mcq=jnp.concatenate(
+            [
+                probe.mcq[PB_MCQ_SUM:PB_MCQ_SUM + 1] + mc_count,
+                jnp.maximum(probe.mcq[PB_MCQ_MAX:PB_MCQ_MAX + 1], mc_count),
+            ],
+            axis=0,
+        ),
+    )
+    return st2, probe2
 
 
 # ---------------------------------------------------------------------------
@@ -924,3 +982,20 @@ def unpack_state(d: LaneDims, ls: LaneState, mc_cls, binj_dtype):
     backlog = ls.node[ND_BACKLOG, :d.R]
     phase = ls.node[ND_PHASE, 0]
     return subs, mc, outstanding, backlog, phase
+
+
+def unpack_probe(d: LaneDims, pb: ProbeLanes):
+    """Probe lanes -> dense probe accumulators, all int32:
+    (occ (S,R,P,V), grant (S,R), deny (S,R), mcq_sum (R,), mcq_max (R,)).
+
+    Padded lanes never accumulate (no heads, no links, no MCs), so the
+    [:R] slices are exact — not a masked approximation."""
+    occ = _from_sr_rows(d, pb.occ, (N_PORTS, d.V), jnp.int32)
+    arb = _from_sr_rows(d, pb.arb, (2,), jnp.int32)
+    return (
+        occ,
+        arb[..., PB_GRANT],
+        arb[..., PB_DENY],
+        pb.mcq[PB_MCQ_SUM, :d.R],
+        pb.mcq[PB_MCQ_MAX, :d.R],
+    )

@@ -149,6 +149,56 @@ def _fused_cycle_kernel(
     o_cnt[...] = new.cnt
 
 
+def _fused_cycle_probed_kernel(
+    xi_ref, xf_ref, gmask_ref, cmask_ref, prof_ref, pol_sr_ref, pol_r_ref,
+    ntype_ref, route_ref, exists_ref,
+    buf_meta_ref, buf_binj_ref, head_ref, count_ref, rr_ref,
+    mcq_ref, mc_ref, node_ref, cnt_ref,
+    p_occ_ref, p_arb_ref, p_mcq_ref,
+    o_buf_meta, o_buf_binj, o_head, o_count, o_rr,
+    o_mcq, o_mc, o_node, o_cnt,
+    o_p_occ, o_p_arb, o_p_mcq,
+    *,
+    dims: fused.LaneDims,
+):
+    """Flight-recorder variant of `_fused_cycle_kernel` (DESIGN.md §14):
+    the ProbeLanes carry rides three extra in/out refs.  Separate kernel
+    function so the probes-off pallas_call signature is untouched."""
+    state = fused.LaneState(
+        buf_meta=buf_meta_ref[...],
+        buf_binj=buf_binj_ref[...],
+        head=head_ref[...],
+        count=count_ref[...],
+        rr=rr_ref[...],
+        mcq=mcq_ref[...],
+        mc=mc_ref[...],
+        node=node_ref[...],
+        cnt=cnt_ref[...],
+    )
+    probe = fused.ProbeLanes(
+        occ=p_occ_ref[...], arb=p_arb_ref[...], mcq=p_mcq_ref[...]
+    )
+    new, new_probe = fused.cycle_step_lanes(
+        dims, state, xi_ref[...], xf_ref[...],
+        gmask_ref[...], cmask_ref[...], prof_ref[...],
+        pol_sr_ref[...], pol_r_ref[...],
+        ntype_ref[...], route_ref[...], exists_ref[...],
+        probe=probe,
+    )
+    o_buf_meta[...] = new.buf_meta
+    o_buf_binj[...] = new.buf_binj
+    o_head[...] = new.head
+    o_count[...] = new.count
+    o_rr[...] = new.rr
+    o_mcq[...] = new.mcq
+    o_mc[...] = new.mc
+    o_node[...] = new.node
+    o_cnt[...] = new.cnt
+    o_p_occ[...] = new_probe.occ
+    o_p_arb[...] = new_probe.arb
+    o_p_mcq[...] = new_probe.mcq
+
+
 def fused_cycle_kernel(
     state: fused.LaneState,
     xi: jax.Array,       # (XI_ROWS, S*64) int32 — this cycle's xs
@@ -164,21 +214,27 @@ def fused_cycle_kernel(
     *,
     dims: fused.LaneDims,
     interpret: bool = False,
-) -> fused.LaneState:
+    probe: fused.ProbeLanes | None = None,
+):
     """One simulated cycle as ONE pallas_call over the whole lane state.
 
     Every operand is small enough (< 100 KiB total at the paper's shapes)
     that the kernel runs as a single full-width block: the grid is (1,) and
     every BlockSpec covers its operand.  Constant tables arrive as input
     refs because Pallas kernel bodies may not capture constant arrays.
+
+    With `probe` the ProbeLanes carry joins the refs and the return value
+    is (LaneState, ProbeLanes) — a distinct kernel (so probes-off stays
+    byte-identical), still ONE launch per cycle.
     """
     ins = (xi, xf, gmask, cmask, prof, pol_sr, pol_r, ntype, route, exists)
-    carry = tuple(state)
+    carry = tuple(state) if probe is None else tuple(state) + tuple(probe)
 
     def spec(x):
         return pl.BlockSpec(x.shape, lambda i: (0, 0))
 
-    kernel = functools.partial(_fused_cycle_kernel, dims=dims)
+    body = _fused_cycle_kernel if probe is None else _fused_cycle_probed_kernel
+    kernel = functools.partial(body, dims=dims)
     outs = pl.pallas_call(
         kernel,
         grid=(1,),
@@ -187,4 +243,7 @@ def fused_cycle_kernel(
         out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype) for x in carry],
         interpret=interpret,
     )(*ins, *carry)
-    return fused.LaneState(*outs)
+    if probe is None:
+        return fused.LaneState(*outs)
+    n = len(fused.LaneState._fields)
+    return fused.LaneState(*outs[:n]), fused.ProbeLanes(*outs[n:])

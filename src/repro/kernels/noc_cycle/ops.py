@@ -34,12 +34,16 @@ def fused_cycle_step(
     gmask: jax.Array, cmask: jax.Array, prof: jax.Array,
     pol_sr: jax.Array, pol_r: jax.Array,
     ntype: jax.Array, route: jax.Array, exists: jax.Array,
-) -> fused.LaneState:
-    """One fused simulated cycle (interpret-mode fallback off-TPU)."""
+    probe: fused.ProbeLanes | None = None,
+):
+    """One fused simulated cycle (interpret-mode fallback off-TPU).
+
+    Returns LaneState, or (LaneState, ProbeLanes) when a flight-recorder
+    carry is threaded through (DESIGN.md §14)."""
     return fused_cycle_kernel(
         state, xi, xf, gmask, cmask, prof, pol_sr, pol_r,
         ntype, route, exists,
-        dims=dims, interpret=_interpret(),
+        dims=dims, interpret=_interpret(), probe=probe,
     )
 
 

@@ -1,0 +1,17 @@
+"""Flight-recorder observability layer (DESIGN.md §14).
+
+Three layers, all opt-in and zero-cost when off:
+
+  * probes.py    — `ProbeConfig` / `SimTrace`: per-epoch introspection
+                   emitted by the traced simulator (occupancy, arbitration
+                   grant/deny, MC queue depth, KF internals), bitwise-equal
+                   across the `ref` and fused `pallas` cycle engines.
+  * ledger.py    — structured run records: the single append path for
+                   BENCH_noc.json plus a JSONL mirror, with the schema
+                   validator that benchmarks/check_bench.py enforces.
+  * profiling.py — jax.profiler trace contexts behind the fig drivers'
+                   `--profile DIR` flag.
+"""
+
+from repro.obs.probes import ProbeConfig, SimTrace
+from repro.obs import ledger, profiling

@@ -1,0 +1,145 @@
+"""Structured run ledger: the single append path for BENCH_noc.json.
+
+Every benchmark record in this repo funnels through `append` (via
+`benchmarks.bench_sweep.append_record`, which all drivers import), which
+
+  * stamps the row with provenance — `ledger_version`, `git_sha`,
+    `device_kind` — on top of the fields the bench already recorded
+    (`bench`, `timestamp`, `backend`, trace counts, wall-clock);
+  * validates the row against the schema below and refuses to write a
+    malformed one;
+  * appends to the committed JSON array AND mirrors the row as one JSONL
+    line to LEDGER_noc.jsonl next to it (machine-tailable, gitignored).
+
+`validate_row` is also the gate `benchmarks/check_bench.py` runs over
+every committed row: rows stamped with `ledger_version` are hard-gated,
+pre-ledger rows get the tolerated core check (see check_bench).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import subprocess
+from typing import Any
+
+LEDGER_VERSION = 1
+
+# Fields every bench row must carry, ledger-stamped or not.
+CORE_FIELDS = {"bench": str, "timestamp": str, "backend": str}
+# Fields `append` stamps; present on every row written since the ledger.
+STAMP_FIELDS = {"ledger_version": int, "git_sha": str, "device_kind": str}
+
+
+def git_sha(cwd: str | None = None) -> str:
+    """Current commit sha, or "unknown" outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=cwd or os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def device_kind() -> str:
+    """Kind of jax.devices()[0] (e.g. "cpu", "TPU v4"), never raises."""
+    try:
+        import jax
+
+        return str(jax.devices()[0].device_kind)
+    except Exception:
+        return "unknown"
+
+
+def config_hash(obj: Any) -> str:
+    """Stable short hash of a config (dataclass, namedtuple, or dict)."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        obj = dataclasses.asdict(obj)
+    elif hasattr(obj, "_asdict"):
+        obj = obj._asdict()
+    blob = json.dumps(obj, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def run_stamp() -> dict:
+    return {
+        "ledger_version": LEDGER_VERSION,
+        "git_sha": git_sha(),
+        "device_kind": device_kind(),
+    }
+
+
+def validate_row(row: Any, stamped: bool | None = None) -> list:
+    """Return the list of schema problems (empty = valid).
+
+    stamped=None infers from the row: a `ledger_version` key means the
+    row was written through this module and must carry the full stamp.
+    """
+    problems = []
+    if not isinstance(row, dict):
+        return [f"row is {type(row).__name__}, expected object"]
+    for field, typ in CORE_FIELDS.items():
+        if field not in row:
+            problems.append(f"missing required field {field!r}")
+        elif not isinstance(row[field], typ):
+            problems.append(
+                f"field {field!r} is {type(row[field]).__name__}, "
+                f"expected {typ.__name__}"
+            )
+    if stamped is None:
+        stamped = "ledger_version" in row
+    if stamped:
+        for field, typ in STAMP_FIELDS.items():
+            if field not in row:
+                problems.append(f"missing stamp field {field!r}")
+            elif not isinstance(row[field], typ):
+                problems.append(
+                    f"stamp field {field!r} is {type(row[field]).__name__}, "
+                    f"expected {typ.__name__}"
+                )
+        ver = row.get("ledger_version")
+        if isinstance(ver, int) and ver > LEDGER_VERSION:
+            problems.append(
+                f"ledger_version {ver} is newer than this validator "
+                f"({LEDGER_VERSION})"
+            )
+    return problems
+
+
+def jsonl_path(bench_path: str) -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(bench_path)),
+                        "LEDGER_noc.jsonl")
+
+
+def append(rec: dict, path: str) -> dict:
+    """Stamp, validate, and append `rec` to the bench array at `path`.
+
+    Returns the stamped record. Raises ValueError instead of writing a
+    row that fails the schema — a malformed committed row would turn the
+    check_bench gate red for every later PR.
+    """
+    rec = dict(rec)
+    for field, value in run_stamp().items():
+        rec.setdefault(field, value)
+    problems = validate_row(rec, stamped=True)
+    if problems:
+        raise ValueError(f"ledger row rejected: {problems} in {rec!r}")
+
+    if os.path.exists(path):
+        with open(path) as f:
+            records = json.load(f)
+    else:
+        records = []
+    records.append(rec)
+    with open(path, "w") as f:
+        json.dump(records, f, indent=2)
+        f.write("\n")
+    with open(jsonl_path(path), "a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+    return rec

@@ -1,0 +1,80 @@
+"""Probe configuration and trace pytree for the NoC simulator.
+
+`ProbeConfig` is a STATIC, hashable knob: it rides on `NoCConfig` /
+`sim.SimStatic`, so flipping it produces a different compiled program.
+Probes off (the default) leaves the simulator's traced computation — and
+therefore the trace count and every golden capture — bit-for-bit
+unchanged; probes on is its own single trace that additionally returns a
+`SimTrace` alongside `SimResult`.
+
+This module must stay import-light (no sim/router imports): sim.py
+imports it at module load.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+from jax import Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeConfig:
+    """Static flight-recorder switch.
+
+    enabled=False must be the all-default value: `SimStatic` embeds this
+    dataclass, and any non-default field would change the jit cache key of
+    every existing caller.
+    """
+
+    enabled: bool = False
+
+
+class SimTrace(NamedTuple):
+    """Per-epoch introspection stream (leading axis = n_epochs, E).
+
+    Fabric probes are accumulated per cycle inside the epoch and summed
+    (or maxed) over the epoch's `epoch_len` cycles; KF internals are the
+    epoch-boundary filter step that produced `SimResult.kf_signal`.
+
+    Shapes use S = padded subnets, R = routers, P = ports, V = VCs per
+    subnet, and all fabric probes sample END-of-cycle state so the `ref`
+    and fused `pallas` engines agree bitwise.
+    """
+
+    # fabric occupancy: sum over cycles of per-buffer flit count
+    occ_sum: Array        # (E, S, R, P, V) int32
+    # switch allocation: grants and refusals per router, summed over
+    # output ports and cycles
+    arb_grant: Array      # (E, S, R) int32
+    arb_deny: Array       # (E, S, R) int32
+    # memory-controller queue depth, summed / maxed over cycles
+    mcq_sum: Array        # (E, R) int32
+    mcq_max: Array        # (E, R) int32
+    # KF internals at the epoch boundary (scalar-state, 3-obs filter)
+    kf_innovation: Array  # (E, 3) float32
+    kf_gain: Array        # (E, 3) float32
+    kf_cov_trace: Array   # (E,)   float32
+    kf_x_pred: Array      # (E,)   float32  one-step demand prediction
+    # realized (normalized) observation vector the filter consumed —
+    # kf_x_pred[e] vs z_obs[e+1] is the prediction-vs-realized pairing
+    z_obs: Array          # (E, 3) float32
+
+
+def summarize_trace(trace: SimTrace) -> dict:
+    """Small JSON-friendly digest of a SimTrace (for ledger rows)."""
+    import numpy as np
+
+    occ = np.asarray(trace.occ_sum)
+    return {
+        "epochs": int(occ.shape[0]),
+        "occ_sum_total": int(occ.sum()),
+        "arb_grant_total": int(np.asarray(trace.arb_grant).sum()),
+        "arb_deny_total": int(np.asarray(trace.arb_deny).sum()),
+        "mcq_max": int(np.asarray(trace.mcq_max).max()),
+        "kf_innovation_rms": float(
+            np.sqrt(np.mean(np.square(np.asarray(trace.kf_innovation))))
+        ),
+        "kf_cov_trace_last": float(np.asarray(trace.kf_cov_trace)[-1]),
+    }

@@ -1,0 +1,50 @@
+"""jax.profiler hooks behind the fig drivers' `--profile DIR` flag.
+
+`profiled_run(outdir, fn)` runs `fn` twice under two separate profiler
+traces: DIR/compile (first call — includes tracing + XLA compilation)
+and DIR/steady (second call — jit caches warm, pure device execution).
+With outdir falsy it degrades to a single plain call, so drivers can
+wrap their `run(...)` unconditionally.
+
+View the captures with `tensorboard --logdir DIR` or Perfetto
+(`xprof`); the trace directories are plain TensorBoard event layouts.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Callable, Iterator, TypeVar
+
+T = TypeVar("T")
+
+
+@contextlib.contextmanager
+def trace(outdir: str | None, label: str) -> Iterator[None]:
+    """Profile the enclosed block into outdir/label (no-op when falsy)."""
+    if not outdir:
+        yield
+        return
+    import jax
+
+    path = os.path.join(outdir, label)
+    os.makedirs(path, exist_ok=True)
+    with jax.profiler.trace(path):
+        yield
+
+
+def profiled_run(outdir: str | None, fn: Callable[[], T], label: str = "") -> T:
+    """Call fn under compile- and steady-phase profiler traces.
+
+    The doubled call is deliberate: one capture that mixes tracing,
+    compilation, and execution is unattributable, which is the problem
+    this flag exists to solve. Without `--profile` there is exactly one
+    call and zero overhead.
+    """
+    if not outdir:
+        return fn()
+    prefix = f"{label}-" if label else ""
+    with trace(outdir, f"{prefix}compile"):
+        fn()
+    with trace(outdir, f"{prefix}steady"):
+        return fn()

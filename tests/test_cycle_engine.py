@@ -556,7 +556,8 @@ def test_fused_router_stage_matches_router_cycle():
     route_rows, exists_rows, _ = fused.run_consts(d, topo)
     active_rows = jnp.repeat(active.astype(jnp.int32), fused.R_PAD)[None, :]
     sa_row = jnp.full((1, d.lanes_sr), sa, jnp.int32)
-    (bm, bb, hd, ct, rr2, ej, e_src, e_cls, e_binj, moved, dram_gpu
+    (bm, bb, hd, ct, rr2, ej, e_src, e_cls, e_binj, moved, dram_gpu,
+     grant_cnt, deny_cnt,
      ) = fused.router_stage_lanes(
         d, ls.buf_meta, ls.buf_binj, ls.head, ls.count, ls.rr,
         _sv_mask_rows(gmask) != 0, _sv_mask_rows(cmask) != 0,
@@ -580,6 +581,11 @@ def test_fused_router_stage_matches_router_cycle():
     )
     assert int(moved) == int(ref_ev.moved)
     assert int(dram_gpu) == int(ref_ev.dram_block_gpu)
+    # probe rows (DESIGN.md §14): the lane twin of CycleEvents.grant_cnt
+    # and deny_cnt must agree even when probes are off (they feed the
+    # flight recorder only when ProbeConfig.enabled compiles them in)
+    np.testing.assert_array_equal(sr(grant_cnt), np.asarray(ref_ev.grant_cnt))
+    np.testing.assert_array_equal(sr(deny_cnt), np.asarray(ref_ev.deny_cnt))
 
 
 def test_fused_single_cycle_counters_match_ref():

@@ -150,3 +150,95 @@ def test_fleet_kf_matches_single_filter():
                                    np.asarray(state.p[0]), atol=1e-6,
                                    rtol=1e-4)
         assert int(sig_fleet[0]) == int(kalman.binarize(state.x[0]))
+
+
+# ---------------------------------------------------------------------------
+# telemetry: StepTimer phase accounting + Telemetry.observe normalization
+
+
+def _timed_step(timer, step_s, wait_s, t=[100.0]):
+    """Drive one begin/ready/end cycle with a fake clock."""
+    import repro.dist.telemetry as telemetry
+
+    orig = telemetry.time.perf_counter
+    try:
+        telemetry.time.perf_counter = lambda: t[0]
+        timer.step_begin()
+        t[0] += wait_s
+        timer.mark_input_ready()
+        t[0] += step_s - wait_s
+        timer.step_end()
+    finally:
+        telemetry.time.perf_counter = orig
+
+
+def test_step_timer_first_step_seeds_ema():
+    from repro.dist.telemetry import StepTimer
+
+    timer = StepTimer(ema=0.8)
+    _timed_step(timer, step_s=1.0, wait_s=0.25)
+    # first sample SEEDS the EMA (no decay from the 0.0 prior)
+    assert timer.wait_frac == pytest.approx(0.25)
+    assert timer.step_time == pytest.approx(1.0)
+    _timed_step(timer, step_s=1.0, wait_s=0.75)
+    assert timer.wait_frac == pytest.approx(0.8 * 0.25 + 0.2 * 0.75)
+
+
+def test_step_timer_end_without_begin_clears_ready_mark():
+    from repro.dist.telemetry import StepTimer
+
+    timer = StepTimer()
+    # a stray ready+end without a begin must not leak the ready mark into
+    # the next step's wait accounting
+    timer.mark_input_ready()  # no-op: no step in flight
+    timer._t_ready = 12345.0  # simulate a stale mark from a torn-down step
+    timer.step_end()
+    assert timer._t_ready is None and timer._t0 is None
+    _timed_step(timer, step_s=1.0, wait_s=0.0)
+    assert timer.wait_frac == pytest.approx(0.0)
+
+
+def test_step_timer_ready_at_counter_zero_counts():
+    from repro.dist.telemetry import StepTimer
+
+    import repro.dist.telemetry as telemetry
+
+    timer = StepTimer()
+    t = [0.0]
+    orig = telemetry.time.perf_counter
+    try:
+        telemetry.time.perf_counter = lambda: t[0]
+        timer.step_begin()          # t0 = 0.0
+        t[0] = 0.0
+        timer.mark_input_ready()    # t_ready = 0.0 — falsy but valid
+        t[0] = 2.0
+        timer.step_end()
+    finally:
+        telemetry.time.perf_counter = orig
+    # wait of 0.0s measured from a 0.0-valued counter is a real sample, and
+    # the step must fully reset for the next cycle
+    assert timer.wait_frac == pytest.approx(0.0)
+    assert timer.step_time == pytest.approx(2.0)
+    assert timer._t0 is None and timer._t_ready is None
+
+
+def test_telemetry_observe_normalized():
+    from repro.dist.telemetry import StaticCosts, Telemetry
+
+    tel = Telemetry(
+        costs_by_variant={0: StaticCosts(hbm_bytes=8e9,
+                                         collective_bytes=1e9)},
+        comm_scale=1e9, hbm_capacity=16e9,
+    )
+    tel.timer.wait_frac = 0.5
+    z = np.asarray(tel.observe())
+    assert z.shape == (3,)
+    assert np.all(z >= -1.0) and np.all(z <= 1.0)
+    # raw = [0.5, 1.0, 0.5] over hi = [1, 2, 1] -> all normalize identically
+    assert z[0] == pytest.approx(z[1]) and z[0] == pytest.approx(z[2])
+    # no costs at all -> only the stall channel moves the vector
+    tel_empty = Telemetry(costs_by_variant={})
+    tel_empty.timer.wait_frac = 0.5
+    z2 = np.asarray(tel_empty.observe())
+    assert z2[2] == pytest.approx(z[2])
+    assert z2[0] == pytest.approx(np.min(z2))
