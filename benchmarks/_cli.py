@@ -1,0 +1,85 @@
+"""Shared CLI surface for the fig drivers (DESIGN.md §15).
+
+Every fig driver used to copy-paste the same argparse block
+(``--devices``, ``--backend``, ``--profile``, plus ``--smoke``/``--gate``
+where gated); new cross-cutting flags then had to land six times.  This
+helper is the one place that surface lives now:
+
+    ap = _cli.build_parser(__doc__, smoke_help=..., gate_help=...)
+    args = ap.parse_args(argv)
+    wl = _cli.registered_trace(args)        # --trace F.npz -> workload name
+
+``--trace PATH`` (and its ``--trace-fit`` companion) registers a recorded
+demand trace (`traffic.RecordedTrace` npz schema) as a sweep workload so
+any figure can be driven by replayed/adapted demand instead of its
+builtin synthetic workloads.  The default fit is "stretch": drivers run
+at many ``n_epochs``, and a linear resample keeps any trace usable
+everywhere (pass ``--trace-fit exact`` to insist on bitwise replay).
+"""
+from __future__ import annotations
+
+import argparse
+
+BACKENDS = ("ref", "pallas", "pallas_arb")
+
+# The registry name `--trace` files land under: drivers substitute it for
+# their builtin workload/scenario set when the flag is present.
+TRACE_WORKLOAD = "TRACE"
+
+
+def build_parser(
+    description: str | None = None,
+    *,
+    smoke_help: str | None = None,
+    gate_help: str | None = None,
+    trace: bool = True,
+) -> argparse.ArgumentParser:
+    """The fig drivers' common parser; driver-specific flags add on top."""
+    ap = argparse.ArgumentParser(
+        description=description,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the sweep batch axis across N devices")
+    ap.add_argument("--backend", choices=BACKENDS, default="ref",
+                    help="cycle engine: dense jnp (ref), fused full-cycle "
+                         "lane kernel (pallas), or arbitration-only kernel "
+                         "(pallas_arb); all bitwise-identical")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="capture jax.profiler traces (compile + steady "
+                         "phases) into DIR")
+    if smoke_help is not None:
+        ap.add_argument("--smoke", action="store_true", help=smoke_help)
+    if gate_help is not None:
+        ap.add_argument("--gate", action="store_true", help=gate_help)
+    if trace:
+        ap.add_argument("--trace", metavar="F.npz", default=None,
+                        help="drive the figure with a recorded demand trace "
+                             "(DESIGN.md §15 npz schema) instead of its "
+                             "builtin workloads")
+        ap.add_argument("--trace-fit", choices=("exact", "tile", "stretch"),
+                        default="stretch",
+                        help="how a trace of T epochs fits a run of "
+                             "n_epochs: exact requires T == n_epochs, tile "
+                             "repeats cyclically, stretch resamples "
+                             "linearly (default)")
+    return ap
+
+
+def registered_trace(args) -> str | None:
+    """Register ``--trace`` (if given) as a workload; return its name.
+
+    Returns None when the flag is absent so drivers can fall back to
+    their builtin workload sets.
+    """
+    path = getattr(args, "trace", None)
+    if not path:
+        return None
+    from repro.core.noc.traffic import register_trace
+
+    trace = register_trace(TRACE_WORKLOAD, path,
+                           fit=getattr(args, "trace_fit", "stretch"),
+                           overwrite=True)
+    print(f"# --trace: registered {path} as workload {TRACE_WORKLOAD!r} "
+          f"({trace.n_epochs_recorded} epochs, fit={trace.fit})")
+    return TRACE_WORKLOAD

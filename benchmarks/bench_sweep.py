@@ -33,7 +33,7 @@ import jax
 import numpy as np
 
 from repro.core.noc import sim
-from repro.core.noc.traffic import PROFILES, materialize
+from repro.core.noc.traffic import PROFILES, resolve_source
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_noc.json")
 
@@ -84,7 +84,7 @@ def time_serial_seed_style(cfgs, profs) -> float:
         fresh = _fresh_jit(sim._simulate_impl)
         stc = cfg.static_spec(padded=False)
         _block(fresh(stc, cfg.mode_policy(padded=False),
-                     materialize(prof, stc.n_epochs), cfg.seed,
+                     resolve_source(prof, stc.n_epochs), cfg.seed,
                      sim.init_sim_state(stc)))
     return time.perf_counter() - t0
 

@@ -219,6 +219,40 @@ def check_ablation(records: list) -> list:
     return failures
 
 
+def check_trace_replay_row(records: list) -> list:
+    """Tolerate-then-gate the committed `noc_trace_replay` record.
+
+    Absent record -> tolerated (the trace-replay bench has never been run
+    on this checkout); present record -> it must document KF >= every
+    naive predictor on the replayed trace, the single-trace contract, and
+    a bitwise-green record->replay round trip.
+    """
+    rows = [r for r in records if r.get("bench") == "noc_trace_replay"]
+    if not rows:
+        print("noc_trace_replay: no committed record yet — tolerated "
+              "(run benchmarks.fig_trace_replay non-smoke to add one)")
+        return []
+    row = rows[-1]
+    failures = []
+    if row.get("traces", 1) != 1:
+        failures.append(
+            f"trace-replay regression: committed noc_trace_replay row "
+            f"traced simulate {row.get('traces')}x (contract: 1)"
+        )
+    if row.get("kf_beats_all") is not True:
+        failures.append(
+            "trace-replay regression: committed noc_trace_replay row no "
+            "longer shows KF >= every naive predictor on the replayed "
+            f"trace {row.get('source')!r} (margins: {row.get('margins')})"
+        )
+    if row.get("replay_bitwise") is not True:
+        failures.append(
+            "trace-replay regression: committed noc_trace_replay row's "
+            "record->replay round trip was not bitwise-identical"
+        )
+    return failures
+
+
 def check(rec: dict, baseline: dict, min_speedup: float, frac: float,
           min_steady: float = DEFAULT_MIN_STEADY,
           steady_frac: float = DEFAULT_STEADY_FRAC,
@@ -297,6 +331,7 @@ def main(argv=None) -> int:
         gate_steady=args.grid == "full",
     )
     failures += check_ablation(records)
+    failures += check_trace_replay_row(records)
     failures += check_pallas_row(records)
     failures += check_ledger_schema(records)
     failures += check_obs_row(records)

@@ -16,7 +16,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.noc.sim import SWEEP_TILE, NoCConfig, simulate_batch
-from repro.core.noc.traffic import PROFILES
 
 SEEDS = (0, 1, 2)
 
@@ -27,7 +26,7 @@ def run(workload: str = "STO", n_epochs: int = 120,
     cfgs = [NoCConfig(mode=m, n_epochs=n_epochs, seed=s, **overrides)
             for m in ("fair", "kf") for s in seeds]
     batch_tile = None if devices is not None else SWEEP_TILE
-    res = simulate_batch(cfgs, PROFILES[workload], batch_tile=batch_tile,
+    res = simulate_batch(cfgs, workload, batch_tile=batch_tile,
                          devices=devices)
     n = len(seeds)
     fair_ipc = np.asarray(res.gpu_ipc[:n])
@@ -44,25 +43,16 @@ def run(workload: str = "STO", n_epochs: int = 120,
 
 
 def main(argv=None):
-    import argparse
+    from benchmarks import _cli
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--devices", type=int, default=None,
-                    help="shard the two-arm batch across N devices")
-    ap.add_argument("--backend", choices=("ref", "pallas", "pallas_arb"),
-                    default="ref",
-                    help="cycle engine: dense jnp (ref), fused full-cycle "
-                         "lane kernel (pallas), or arbitration-only kernel "
-                         "(pallas_arb); all bitwise-identical")
-    ap.add_argument("--profile", metavar="DIR", default=None,
-                    help="capture jax.profiler traces (compile + steady "
-                         "phases) into DIR")
-    args = ap.parse_args(argv)
+    args = _cli.build_parser(__doc__).parse_args(argv)
     from repro.obs import profiling
 
+    workload = _cli.registered_trace(args) or "STO"
     tr = profiling.profiled_run(
         args.profile,
-        lambda: run(devices=args.devices, backend=args.backend),
+        lambda: run(workload=workload, devices=args.devices,
+                    backend=args.backend),
         label="fig12",
     )
     print("epoch,fair_gpu_ipc,kf_gpu_ipc,kf_signal,applied_config")

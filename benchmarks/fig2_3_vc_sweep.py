@@ -21,10 +21,11 @@ SEEDS = (0, 1, 2)
 
 
 def run(n_epochs: int = 60, seeds: tuple[int, ...] = SEEDS,
-        devices: int | None = None, **overrides) -> dict:
+        devices: int | None = None,
+        workloads: tuple[str, ...] = WORKLOADS, **overrides) -> dict:
     specs = [
         SweepSpec("static", wl, static_gpu_vcs=g, seed=s)
-        for wl in WORKLOADS for g in RATIOS for s in seeds
+        for wl in workloads for g in RATIOS for s in seeds
     ]
     rows = sweep(specs, n_epochs=n_epochs, devices=devices, **overrides)
     by_point = {
@@ -37,30 +38,22 @@ def run(n_epochs: int = 60, seeds: tuple[int, ...] = SEEDS,
             f"{g}:{4 - g}": summarize_seeds(by_point[(wl, g)])
             for g in RATIOS
         }
-        for wl in WORKLOADS
+        for wl in workloads
     }
 
 
 def main(argv=None):
-    import argparse
+    from benchmarks import _cli
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--devices", type=int, default=None,
-                    help="shard the sweep batch axis across N devices")
-    ap.add_argument("--backend", choices=("ref", "pallas", "pallas_arb"),
-                    default="ref",
-                    help="cycle engine: dense jnp (ref), fused full-cycle "
-                         "lane kernel (pallas), or arbitration-only kernel "
-                         "(pallas_arb); all bitwise-identical")
-    ap.add_argument("--profile", metavar="DIR", default=None,
-                    help="capture jax.profiler traces (compile + steady "
-                         "phases) into DIR")
-    args = ap.parse_args(argv)
+    args = _cli.build_parser(__doc__).parse_args(argv)
     from repro.obs import profiling
 
+    trace_wl = _cli.registered_trace(args)
+    workloads = (trace_wl,) if trace_wl else WORKLOADS
     results = profiling.profiled_run(
         args.profile,
-        lambda: run(devices=args.devices, backend=args.backend),
+        lambda: run(devices=args.devices, backend=args.backend,
+                    workloads=workloads),
         label="fig2_3",
     )
     print("workload,ratio,gpu_ipc,gpu_ipc_std,cpu_ipc,cpu_ipc_std,avg_latency")

@@ -17,7 +17,6 @@ from repro.core.noc.sim import (
     run_workload,
     simulate_batch,
 )
-from repro.core.noc.traffic import PROFILES
 
 
 def run(workload: str = "PATH", n_epochs: int = 120,
@@ -31,7 +30,7 @@ def run(workload: str = "PATH", n_epochs: int = 120,
                           **overrides)
                 for s in seeds]
         batch_tile = None if devices is not None else SWEEP_TILE
-        batch = simulate_batch(cfgs, PROFILES[workload],
+        batch = simulate_batch(cfgs, workload,
                                batch_tile=batch_tile, devices=devices)
         res = jax.tree.map(lambda x: x[0], batch)
     else:
@@ -48,25 +47,16 @@ def run(workload: str = "PATH", n_epochs: int = 120,
 
 
 def main(argv=None):
-    import argparse
+    from benchmarks import _cli
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--devices", type=int, default=None,
-                    help="run the trace through the device-sharded batch path")
-    ap.add_argument("--backend", choices=("ref", "pallas", "pallas_arb"),
-                    default="ref",
-                    help="cycle engine: dense jnp (ref), fused full-cycle "
-                         "lane kernel (pallas), or arbitration-only kernel "
-                         "(pallas_arb); all bitwise-identical")
-    ap.add_argument("--profile", metavar="DIR", default=None,
-                    help="capture jax.profiler traces (compile + steady "
-                         "phases) into DIR")
-    args = ap.parse_args(argv)
+    args = _cli.build_parser(__doc__).parse_args(argv)
     from repro.obs import profiling
 
+    workload = _cli.registered_trace(args) or "PATH"
     tr = profiling.profiled_run(
         args.profile,
-        lambda: run(devices=args.devices, backend=args.backend),
+        lambda: run(workload=workload, devices=args.devices,
+                    backend=args.backend),
         label="fig4",
     )
     print("epoch,gpu_inj_rate,gpu_ipc,gpu_stall_icnt,gpu_stall_dram,cpu_push")

@@ -22,10 +22,11 @@ SEEDS = (0, 1, 2)
 
 
 def run(n_epochs: int = 60, seeds: tuple[int, ...] = SEEDS,
-        devices: int | None = None, **overrides) -> dict:
+        devices: int | None = None,
+        workloads: tuple[str, ...] = WORKLOADS, **overrides) -> dict:
     specs = [
         SweepSpec(m, wl, seed=s)
-        for wl in WORKLOADS for m in MODES for s in seeds
+        for wl in workloads for m in MODES for s in seeds
     ]
     rows = sweep(specs, n_epochs=n_epochs, devices=devices, **overrides)
     by_point: dict[tuple[str, str], list] = {}
@@ -33,30 +34,22 @@ def run(n_epochs: int = 60, seeds: tuple[int, ...] = SEEDS,
         by_point.setdefault((sp.workload, sp.mode), []).append(row)
     return {
         wl: {m: summarize_seeds(by_point[(wl, m)]) for m in MODES}
-        for wl in WORKLOADS
+        for wl in workloads
     }
 
 
 def main(argv=None):
-    import argparse
+    from benchmarks import _cli
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--devices", type=int, default=None,
-                    help="shard the sweep batch axis across N devices")
-    ap.add_argument("--backend", choices=("ref", "pallas", "pallas_arb"),
-                    default="ref",
-                    help="cycle engine: dense jnp (ref), fused full-cycle "
-                         "lane kernel (pallas), or arbitration-only kernel "
-                         "(pallas_arb); all bitwise-identical")
-    ap.add_argument("--profile", metavar="DIR", default=None,
-                    help="capture jax.profiler traces (compile + steady "
-                         "phases) into DIR")
-    args = ap.parse_args(argv)
+    args = _cli.build_parser(__doc__).parse_args(argv)
     from repro.obs import profiling
 
+    trace_wl = _cli.registered_trace(args)
+    workloads = (trace_wl,) if trace_wl else WORKLOADS
     results = profiling.profiled_run(
         args.profile,
-        lambda: run(devices=args.devices, backend=args.backend),
+        lambda: run(devices=args.devices, backend=args.backend,
+                    workloads=workloads),
         label="fig9_10_11",
     )
     print("workload,mode,gpu_ipc,gpu_ipc_std,cpu_ipc,avg_latency,kf_on_frac")
@@ -67,14 +60,14 @@ def main(argv=None):
                   f"{s['kf_on_frac']:.2f}")
     lat_wins = sum(results[w]["kf"]["avg_latency"]
                    <= results[w]["baseline"]["avg_latency"]
-                   for w in WORKLOADS)
+                   for w in workloads)
     gpu_gains = [results[w]["kf"]["gpu_ipc"]
                  / max(results[w]["baseline"]["gpu_ipc"], 1e-9) - 1
-                 for w in WORKLOADS]
+                 for w in workloads]
     cpu_moves = [abs(results[w]["kf"]["cpu_ipc"]
                      / max(results[w]["baseline"]["cpu_ipc"], 1e-9) - 1)
-                 for w in WORKLOADS]
-    print(f"# KF latency <= baseline on {lat_wins}/{len(WORKLOADS)} workloads")
+                 for w in workloads]
+    print(f"# KF latency <= baseline on {lat_wins}/{len(workloads)} workloads")
     print(f"# KF GPU IPC gain: mean {sum(gpu_gains)/len(gpu_gains):+.1%}, "
           f"max {max(gpu_gains):+.1%} (paper: ~+7% mean, up to +19%)")
     print(f"# CPU IPC max |change| {max(cpu_moves):.1%} "

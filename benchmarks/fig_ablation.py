@@ -22,7 +22,6 @@ append a `noc_ablation` record to BENCH_noc.json, which
 """
 from __future__ import annotations
 
-import argparse
 import json
 import math
 import sys
@@ -119,8 +118,8 @@ def kf_verdict(table: dict, scenario: str = GATE_SCENARIO) -> dict:
     }
 
 
-def record(res: dict, grid: dict) -> dict:
-    verdict = kf_verdict(res["table"])
+def record(res: dict, grid: dict, scenario: str = GATE_SCENARIO) -> dict:
+    verdict = kf_verdict(res["table"], scenario)
     return {
         "bench": "noc_ablation",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -136,23 +135,15 @@ def record(res: dict, grid: dict) -> dict:
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="one seed on the gate scenario at full simulated "
-                         "dims (see SMOKE); no BENCH_noc.json append")
-    ap.add_argument("--gate", action="store_true",
-                    help="exit 1 unless KF >= every naive predictor on the "
-                         "phase-shift scenario AND the grid ran single-trace")
-    ap.add_argument("--devices", type=int, default=None,
-                    help="shard the ablation batch axis across N devices")
-    ap.add_argument("--backend", choices=("ref", "pallas", "pallas_arb"),
-                    default="ref",
-                    help="cycle engine: dense jnp (ref), fused full-cycle "
-                         "lane kernel (pallas), or arbitration-only kernel "
-                         "(pallas_arb); all bitwise-identical")
-    ap.add_argument("--profile", metavar="DIR", default=None,
-                    help="capture jax.profiler traces (compile + steady "
-                         "phases) into DIR")
+    from benchmarks import _cli
+
+    ap = _cli.build_parser(
+        __doc__,
+        smoke_help="one seed on the gate scenario at full simulated "
+                   "dims (see SMOKE); no BENCH_noc.json append",
+        gate_help="exit 1 unless KF >= every naive predictor on the "
+                  "phase-shift scenario AND the grid ran single-trace",
+    )
     args = ap.parse_args(argv)
     from repro.obs import profiling
 
@@ -161,6 +152,10 @@ def main(argv=None):
         seeds, scenarios = SMOKE["seeds"], SMOKE["scenarios"]
     else:
         seeds, scenarios = SEEDS, SCENARIO_SET
+    trace_wl = _cli.registered_trace(args)
+    if trace_wl:
+        # the replayed trace becomes both the scenario set and the gate
+        scenarios = (trace_wl,)
 
     res = profiling.profiled_run(
         args.profile,
@@ -176,7 +171,8 @@ def main(argv=None):
                   f"{s['cpu_ipc']:.4f},{s['avg_latency']:.2f},"
                   f"{s['kf_on_frac']:.2f}")
 
-    verdict = kf_verdict(res["table"])
+    gate_scenario = trace_wl or GATE_SCENARIO
+    verdict = kf_verdict(res["table"], gate_scenario)
     print(f"# traces: {res['traces']} (contract: 1)")
     print(f"# {verdict['scenario']}: KF gpu_ipc {verdict['kf_gpu_ipc']:.4f}; "
           "margins vs naive: "
@@ -189,7 +185,7 @@ def main(argv=None):
 
         grid = {"scenarios": list(scenarios), "predictors": list(PREDICTORS),
                 "seeds": list(seeds), "n_epochs": n_epochs}
-        rec = record(res, grid)
+        rec = record(res, grid, gate_scenario)
         append_record(rec)
         print(json.dumps(rec, indent=2))
         print(f"appended noc_ablation record to {BENCH_PATH}")

@@ -1,0 +1,230 @@
+"""Trace-driven demand replay: KF-vs-naive ordering on replayed traces
+(DESIGN.md §15).
+
+The predictor ablation (fig_ablation) runs on synthetic scenario
+schedules; this driver runs the SAME comparison on *replayed* demand:
+
+  * by default, the HLO-cost adapter's serving trace — per-epoch demand
+    derived from XLA `cost_analysis()` of this repo's own prefill/decode
+    steps (`repro.core.noc.trace_adapters`), the first non-synthetic
+    workload family;
+  * with ``--trace F.npz``, any recorded demand trace (e.g. a
+    `repro.obs.recorder.TraceRecorder` capture).
+
+The replayed trace registers as a sweep workload, so the whole
+predictor x seed grid still shares the simulator's ONE compiled program
+(``--gate`` asserts it).  ``--check`` is the CI record->replay smoke: a
+4-epoch `TraceRecorder` capture of the gate scenario round-trips through
+the npz schema and must replay bitwise-identical to the originating run.
+
+Gate: KF mean GPU IPC >= every naive predictor on the replayed trace,
+single-trace grid, and the record->replay check bitwise-green.  Non-smoke
+runs append a `noc_trace_replay` ledger row, which
+`benchmarks/check_bench.py` tolerates-until-present and then gates on.
+
+    PYTHONPATH=src python -m benchmarks.fig_trace_replay
+        [--smoke] [--gate] [--check] [--trace F.npz] [--save-trace F.npz]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.fig_ablation import (
+    KF_Q_ABLATION,
+    PREDICTORS,
+    kf_verdict,
+    run as ablation_run,
+)
+
+# Registry name the default HLO-adapter trace lands under.
+HLO_WORKLOAD = "HLO_SERVE"
+SEEDS = (0, 1, 2)
+SMOKE_SEEDS = (0,)
+# The record->replay smoke's capture source and dims: 4 epochs is enough
+# to exercise the schema + scan-xs path while staying milliseconds-cheap.
+CHECK_SCENARIO = "SHIFT_PATH_BFS"
+CHECK_EPOCHS = 4
+
+
+def prepare_source(args) -> tuple[str, dict]:
+    """Register the demand source; return (workload name, provenance).
+
+    ``--trace F.npz`` wins; otherwise the HLO-cost adapter builds the
+    serving trace from this repo's own model steps.
+    """
+    from benchmarks import _cli
+
+    name = _cli.registered_trace(args)
+    if name:
+        from repro.core.noc.traffic import lookup_workload
+
+        return name, dict(lookup_workload(name).meta, path=args.trace)
+    from repro.core.noc import trace_adapters
+
+    trace = trace_adapters.register_hlo_workload(HLO_WORKLOAD,
+                                                 overwrite=True)
+    if getattr(args, "save_trace", None):
+        trace.save(args.save_trace)
+        print(f"# saved the HLO serving trace to {args.save_trace}")
+    return HLO_WORKLOAD, trace.meta
+
+
+def replay_check(save_path: str | None = None) -> list[str]:
+    """Record->save->load->replay round trip; return failures ([] = pass).
+
+    Captures CHECK_EPOCHS epochs of the gate scenario with TraceRecorder,
+    round-trips the capture through the npz trace schema, replays it, and
+    requires (a) a clean schema validation and (b) bitwise equality with
+    running the scenario directly.
+    """
+    from repro.core.noc import sim
+    from repro.core.noc.traffic import RecordedTrace, validate_trace_npz
+    from repro.obs.recorder import TraceRecorder
+
+    failures = []
+    cfg = sim.NoCConfig(mode="kf", n_epochs=CHECK_EPOCHS, epoch_len=200)
+    own_tmp = save_path is None
+    if own_tmp:
+        fd, save_path = tempfile.mkstemp(suffix=".npz")
+        os.close(fd)
+    try:
+        TraceRecorder(name="replay_check", observe=False).record_to(
+            save_path, cfg, CHECK_SCENARIO)
+        with np.load(save_path, allow_pickle=False) as data:
+            problems = validate_trace_npz(data)
+        if problems:
+            failures.append(f"trace schema: {problems}")
+        replayed = RecordedTrace.load(save_path)
+        ref = sim.simulate(cfg, CHECK_SCENARIO)
+        rep = sim.simulate(cfg, replayed)
+        for (path, a), b in zip(jax.tree_util.tree_leaves_with_path(ref),
+                                jax.tree.leaves(rep)):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                failures.append(
+                    "replay diverged at leaf "
+                    + jax.tree_util.keystr(path)
+                )
+                break
+    finally:
+        if own_tmp:
+            os.unlink(save_path)
+    return failures
+
+
+def record(res: dict, verdict: dict, grid: dict, source: str,
+           provenance: dict) -> dict:
+    cells = res["table"][source]
+    row = {
+        "bench": "noc_trace_replay",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "source": source,
+        "grid": grid,
+        "traces": res["traces"],
+        "gpu_ipc": {p: round(cells[p]["gpu_ipc"], 6) for p in PREDICTORS},
+        **verdict,
+    }
+    phases = provenance.get("phases")
+    if phases:
+        # the HLO adapter's roofline mapping, for provenance: what each
+        # serving phase cost and the injection rate it mapped to
+        row["hlo_phases"] = {
+            p: {k: c[k] for k in ("flops", "bytes", "intensity", "rate")}
+            for p, c in phases.items()
+        }
+    return row
+
+
+def main(argv=None):
+    from benchmarks import _cli
+
+    ap = _cli.build_parser(
+        __doc__,
+        smoke_help="one seed on the replayed trace at full simulated dims; "
+                   "no BENCH_noc.json append",
+        gate_help="exit 1 unless KF >= every naive predictor on the "
+                  "replayed trace, the grid ran single-trace, and the "
+                  "record->replay check is bitwise-green",
+    )
+    ap.add_argument("--check", action="store_true",
+                    help="record->replay smoke only: capture "
+                         f"{CHECK_EPOCHS} epochs of {CHECK_SCENARIO}, "
+                         "round-trip the npz schema, assert bitwise replay")
+    ap.add_argument("--save-trace", metavar="F.npz", default=None,
+                    help="save the HLO serving trace (default source) "
+                         "for reuse via --trace")
+    args = ap.parse_args(argv)
+    from repro.obs import profiling
+
+    if args.check:
+        failures = replay_check()
+        for f in failures:
+            print(f"TRACE REPLAY CHECK: {f}", file=sys.stderr)
+        if not failures:
+            print(f"replay check OK: {CHECK_EPOCHS}-epoch "
+                  f"{CHECK_SCENARIO} capture replays bitwise through the "
+                  "npz schema")
+        return 1 if failures else 0
+
+    source, provenance = prepare_source(args)
+    seeds = SMOKE_SEEDS if args.smoke else SEEDS
+    res = profiling.profiled_run(
+        args.profile,
+        lambda: ablation_run(n_epochs=120, seeds=seeds,
+                             scenarios=(source,), devices=args.devices,
+                             backend=args.backend),
+        label="fig_trace_replay",
+    )
+    print("source,predictor,gpu_ipc,gpu_ipc_std,cpu_ipc,avg_latency,"
+          "boost_frac")
+    for p, s in res["table"][source].items():
+        print(f"{source},{p},{s['gpu_ipc']:.4f},{s['gpu_ipc_std']:.4f},"
+              f"{s['cpu_ipc']:.4f},{s['avg_latency']:.2f},"
+              f"{s['kf_on_frac']:.2f}")
+
+    verdict = kf_verdict(res["table"], source)
+    replay_failures = replay_check()
+    print(f"# traces: {res['traces']} (contract: 1)")
+    print(f"# {source}: KF gpu_ipc {verdict['kf_gpu_ipc']:.4f}; margins "
+          "vs naive: "
+          + ", ".join(f"{p} {m:+.4f}" for p, m in verdict["margins"].items()))
+    print(f"# kf_beats_all: {verdict['kf_beats_all']} "
+          "(KF >= every naive predictor on the replayed trace)")
+    print(f"# record->replay bitwise: {not replay_failures}")
+
+    if not args.smoke:
+        from benchmarks.bench_sweep import BENCH_PATH, append_record
+
+        grid = {"predictors": list(PREDICTORS), "seeds": list(seeds),
+                "n_epochs": 120, "kf_q": KF_Q_ABLATION}
+        rec = record(res, verdict, grid, source, provenance)
+        rec["replay_bitwise"] = not replay_failures
+        append_record(rec)
+        print(json.dumps(rec, indent=2))
+        print(f"appended noc_trace_replay record to {BENCH_PATH}")
+
+    if args.gate:
+        failures = list(replay_failures)
+        if res["traces"] != 1:
+            failures.append(f"replay grid traced simulate {res['traces']}x "
+                            "(contract: the one shared program)")
+        if not verdict["kf_beats_all"]:
+            losing = {p: m for p, m in verdict["margins"].items() if m < 0}
+            failures.append(
+                f"KF lost to {losing} on {source} mean GPU IPC")
+        for f in failures:
+            print(f"TRACE REPLAY GATE: {f}", file=sys.stderr)
+        if failures:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,13 @@ selected by `ModePolicy.predictor.kind`), and workloads — stationary or
 `traffic.ScenarioSchedule` programs — are materialized to per-epoch
 parameter rows consumed through the epoch scan's `xs`, so the whole
 ablation x scenario grid still costs the ONE compiled program.
+
+Traffic sources (DESIGN.md §15): every entry point accepts any
+`traffic.TrafficSource` — a workload name, `WorkloadProfile`,
+`ScenarioSchedule`, or a replayed `RecordedTrace` — and lowers it through
+the single `traffic.resolve_source` path to the canonical per-epoch
+`EpochDemand` rows, so recorded/adapted traces reuse the same compiled
+program as synthetic generators.
 """
 from __future__ import annotations
 
@@ -69,12 +76,12 @@ from repro.core.noc import router as rt
 from repro.core.noc.topology import make_topology
 from repro.obs.probes import ProbeConfig, SimTrace
 from repro.core.noc.traffic import (
-    ScenarioSchedule,
+    TrafficSource,
+    TrafficSourceLike,
     WorkloadProfile,
     init_phase,
     injection_rates,
-    lookup_workload,
-    materialize,
+    resolve_source,
     stack_profiles,
     step_phase_u,
 )
@@ -848,17 +855,18 @@ def _batch_jit():
 
 def simulate(
     cfg: NoCConfig,
-    profile: str | WorkloadProfile | ScenarioSchedule,
+    source: TrafficSourceLike,
     padded: bool = True,
     backend: str | None = None,
 ) -> SimResult:
     """Run one configuration (compiles at most once per `SimStatic`).
 
-    ``profile`` may be a stationary `WorkloadProfile`, a
-    `traffic.ScenarioSchedule` (piecewise workload program — DESIGN.md §12),
-    or a name resolving to either; it is materialized to per-epoch rows
-    before dispatch, so scenarios reuse the same compiled program as
-    stationary workloads.
+    ``source`` may be any `traffic.TrafficSource` — a stationary
+    `WorkloadProfile`, a `traffic.ScenarioSchedule` (piecewise workload
+    program — DESIGN.md §12), a replayed `traffic.RecordedTrace`
+    (DESIGN.md §15), or a name resolving to any of them; it is lowered to
+    per-epoch rows by `traffic.resolve_source` before dispatch, so every
+    source kind reuses the same compiled program as stationary workloads.
 
     With ``padded=True`` (default) every mode runs the shared S/V-padded
     program; ``padded=False`` compiles the mode's dedicated trace, kept so
@@ -874,7 +882,7 @@ def simulate(
     return _SIM_JIT(
         stc,
         cfg.mode_policy(padded),
-        materialize(profile, stc.n_epochs),
+        resolve_source(source, stc.n_epochs),
         jnp.int32(cfg.seed),
         init_sim_state(stc),
     )
@@ -882,7 +890,7 @@ def simulate(
 
 def simulate_with_trace(
     cfg: NoCConfig,
-    profile: str | WorkloadProfile | ScenarioSchedule,
+    source: TrafficSourceLike,
     padded: bool = True,
     backend: str | None = None,
 ) -> tuple[SimResult, SimTrace]:
@@ -895,7 +903,7 @@ def simulate_with_trace(
     (tests/test_obs.py)."""
     if not cfg.probe.enabled:
         cfg = dataclasses.replace(cfg, probe=ProbeConfig(enabled=True))
-    return simulate(cfg, profile, padded=padded, backend=backend)
+    return simulate(cfg, source, padded=padded, backend=backend)
 
 
 def _tree_rows(tree, sl):
@@ -960,7 +968,7 @@ def _sharded_jit(stc: SimStatic, mesh):
 
 def simulate_batch(
     cfgs: Sequence[NoCConfig],
-    profiles: str | WorkloadProfile | ScenarioSchedule | Sequence,
+    sources: TrafficSourceLike | Sequence,
     seeds: Sequence[int] | None = None,
     batch_tile: int | None = None,
     devices: int | None = None,
@@ -971,10 +979,11 @@ def simulate_batch(
 
     cfgs      — length-B configs; all must share the same `static_spec()`
                 (mode/ratio/seed/subnet-structure/predictor are traced).
-    profiles  — length-B workloads, or one for all rows; each entry may be
-                a `WorkloadProfile`, a `traffic.ScenarioSchedule`, or a
-                name resolving to either (all rows are materialized to
-                per-epoch rows and share the one compiled program).
+    sources   — length-B demand sources, or one for all rows; each entry
+                may be any `traffic.TrafficSource` (`WorkloadProfile`,
+                `ScenarioSchedule`, `RecordedTrace`) or a name resolving
+                to one — all rows lower through `traffic.resolve_source`
+                to per-epoch rows and share the one compiled program.
     seeds     — optional per-row seeds; defaults to each cfg's own seed.
     batch_tile— if set, the batch is processed in fixed-size tiles (short
                 batches and the ragged tail padded up), so EVERY sweep in
@@ -1001,11 +1010,13 @@ def simulate_batch(
                 f"config; got {c.static_spec()} != {stc} — group with sweep()"
             )
     B = len(cfgs)
-    if isinstance(profiles, (str, WorkloadProfile, ScenarioSchedule)):
-        profiles = [profiles] * B
-    profiles = [materialize(p, stc.n_epochs) for p in profiles]
+    # NB WorkloadProfile is itself a tuple, so a single source must be
+    # detected by type (name or TrafficSource), not by Sequence-ness.
+    if isinstance(sources, (str, TrafficSource)):
+        sources = [sources] * B
+    profiles = [resolve_source(s, stc.n_epochs) for s in sources]
     if len(profiles) != B:
-        raise ValueError(f"{len(profiles)} profiles for {B} configs")
+        raise ValueError(f"{len(profiles)} sources for {B} configs")
     if seeds is None:
         seeds = [c.seed for c in cfgs]
     seeds = jnp.asarray(list(seeds), jnp.int32)
@@ -1050,10 +1061,13 @@ def simulate_batch(
 class SweepSpec(NamedTuple):
     """One row of a sweep: a network config x workload x seed point.
 
-    ``workload`` names either a stationary profile (`traffic.PROFILES`) or
-    a scenario schedule (`traffic.SCENARIOS`); ``predictor`` picks the bank
-    member driving the hysteresis machine (meaningful for mode="kf" — the
-    predictor-ablation axis, DESIGN.md §12)."""
+    ``workload`` names any demand source resolvable by
+    `traffic.lookup_workload`: a stationary profile (`traffic.PROFILES`),
+    a scenario schedule (`traffic.SCENARIOS`), or a trace/custom source
+    added via `traffic.register_workload` / `traffic.register_trace`
+    (DESIGN.md §15); ``predictor`` picks the bank member driving the
+    hysteresis machine (meaningful for mode="kf" — the predictor-ablation
+    axis, DESIGN.md §12)."""
 
     mode: str
     workload: str
@@ -1103,7 +1117,7 @@ def sweep(
     for idxs in groups.values():
         res = simulate_batch(
             [cfgs[i] for i in idxs],
-            [lookup_workload(specs[i].workload) for i in idxs],
+            [specs[i].workload for i in idxs],
             batch_tile=batch_tile,
             devices=devices,
             mesh=mesh,
@@ -1134,7 +1148,7 @@ def sweep_sharded(
 
 def run_workload(mode: str, workload: str, **overrides) -> SimResult:
     cfg = NoCConfig(mode=mode, **overrides)
-    return simulate(cfg, lookup_workload(workload))
+    return simulate(cfg, workload)
 
 
 def summarize(res: SimResult, warmup_epochs: int = 10) -> dict:

@@ -1,0 +1,225 @@
+"""HLO-cost -> chiplet NoC demand adapter (DESIGN.md §15).
+
+The first non-synthetic workload family: instead of Markov-modulated
+Bernoulli stand-ins for ISPASS benchmarks, demand rows are derived from
+what THIS repo's own models actually move through memory.  For each
+serving phase we lower the real step function (`repro.launch.specs`
+prefill/decode builders over `repro.models` architectures) with
+`jax.jit(step).lower(...)` and read XLA's `cost_analysis()` (via
+`repro.launch.hlo_cost.xla_cost_analysis`, which normalizes the
+list-vs-dict drift across jax versions).  A phase's FLOPs and bytes-moved
+then map to chiplet NoC injection through a roofline argument:
+
+    cycles      = max(flops / peak_flops_per_cycle,
+                      bytes / peak_hbm_bytes_per_cycle)
+    bytes/cycle = bytes / cycles
+    intensity   = (bytes/cycle) / peak_hbm_bytes_per_cycle   in (0, 1]
+    gpu rate    = peak_rate * intensity        packets/node/cycle
+
+so a memory-bound phase (decode: every token re-reads the weights and KV
+cache) saturates the fabric at `peak_rate` — calibrated to the simulated
+network's contention knee, the same ~0.38 regime the synthetic BFS bursts
+hit — while a compute-bound phase (prefill: hundreds of tokens amortize
+each weight read) injects at a small fraction of it.  ``sync`` epochs
+(request-wave barriers / queue drains) carry zero GPU fabric demand; the
+CPU class keeps its stable omnetpp-like 0.12 throughout.
+
+Rows are emitted deterministic (``gpu_rate_lo == gpu_rate_hi``, burst
+phase pinned low) so the replayed trace is a pure function of the HLO —
+no Markov dynamics — and the result is packaged as a
+`traffic.RecordedTrace`, making an LLM-serving demand stream a
+first-class sweep workload via `traffic.register_workload`.
+
+This module imports `repro.launch` / `repro.models` lazily inside the
+phase builders: the core NoC package must stay importable without pulling
+the model stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.noc.traffic import RecordedTrace, WorkloadProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipletRoofline:
+    """The GPU chiplet's machine balance, in per-cycle units.
+
+    Table-1-scale defaults: a 2-SM GPU chiplet sustains 256 MAC-flops per
+    cycle; its share of MC ingress is one 64-byte line per cycle.  Machine
+    balance is therefore 4 flops/byte — phases with lower arithmetic
+    intensity are memory-bound and saturate the fabric.  ``peak_rate`` is
+    the injection rate a fully memory-bound phase maps to: 0.38
+    packets/node/cycle puts 14 GPU tiles at rho ~ 0.95 of the 8 pkt/cycle
+    MC ingress, the queueing knee where VC allocation matters (the same
+    regime the synthetic BFS bursts are tuned to).
+    """
+
+    peak_flops_per_cycle: float = 256.0
+    peak_hbm_bytes_per_cycle: float = 64.0
+    peak_rate: float = 0.38
+    cpu_rate: float = 0.12
+
+    def intensity(self, flops: float, bytes_moved: float) -> float:
+        """Memory-boundedness of a phase in (0, 1]: bytes/cycle fraction."""
+        if bytes_moved <= 0.0:
+            return 0.0
+        cycles = max(flops / self.peak_flops_per_cycle,
+                     bytes_moved / self.peak_hbm_bytes_per_cycle)
+        if cycles <= 0.0:
+            return 0.0
+        return (bytes_moved / cycles) / self.peak_hbm_bytes_per_cycle
+
+    def gpu_rate(self, flops: float, bytes_moved: float) -> float:
+        return self.peak_rate * self.intensity(flops, bytes_moved)
+
+
+# The model the serving phases are lowered from: a small but real
+# attention LM (repro.models.lm) so the CI adapter path stays cheap
+# (lowering only — nothing executes) while the HLO still contains the
+# full prefill/decode structure (QKV matmuls, KV-cache update, logits).
+# d_model=768 puts prefill at arithmetic intensity ~22 flops/byte —
+# compute-bound under the 4 flops/byte machine balance (intensity ~0.18,
+# rate ~0.07: the calm regime) — while decode stays at ~0.7 flops/byte,
+# fully memory-bound (rate = peak 0.38).  That contrast is the property
+# the schedule geometry relies on, asserted by
+# tests/test_traffic_source.py.
+def _tiny_serving_config():
+    from repro.models.config import ModelConfig
+
+    return ModelConfig(name="noc-hlo-tiny", n_layers=2, d_model=768,
+                       n_heads=8, n_kv_heads=4, d_ff=3072, vocab_size=512)
+
+
+def step_cost(kind: str, cfg=None, *, seq: int = 256,
+              batch: int = 4) -> dict:
+    """FLOPs / bytes-moved of one real step, from XLA's cost model.
+
+    kind — "prefill" (forward over `seq` prompt tokens) or "decode" (one
+    new token against a `seq`-deep KV cache).  `cfg` defaults to the tiny
+    serving config.  Nothing is executed: the step is lowered with
+    abstract (ShapeDtypeStruct) inputs and costed symbolically.
+    """
+    import jax
+
+    from repro.launch import specs
+    from repro.launch.hlo_cost import xla_cost_analysis
+
+    if cfg is None:
+        cfg = _tiny_serving_config()
+    cell = specs.ShapeCell(f"adapter_{kind}", seq, batch, kind)
+    params = specs.abstract_params(cfg)
+    if kind == "prefill":
+        step = specs.make_prefill_step(cfg)
+        lowered = jax.jit(step).lower(params, specs.batch_struct(cfg, cell))
+    elif kind == "decode":
+        step = specs.make_serve_step(cfg)
+        token, state = specs.abstract_decode_inputs(cfg, cell)
+        lowered = jax.jit(step).lower(params, token, state)
+    else:
+        raise ValueError(f"unknown phase kind {kind!r}; expected "
+                         "'prefill' or 'decode'")
+    cost = xla_cost_analysis(lowered)
+    if not cost.get("flops") and not cost.get("bytes accessed"):
+        # some jax versions only cost the compiled executable
+        cost = xla_cost_analysis(lowered.compile())
+    return {
+        "kind": kind,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "seq": seq,
+        "batch": batch,
+        "model": cfg.name,
+    }
+
+
+# Default serving schedule: four request waves, each
+# [prefill 12][decode 10][sync 2][decode 6] epochs — prompt ingestion
+# (compute-bound, low fabric demand), a token-generation burst
+# (memory-bound, saturating), an inter-wave barrier/queue drain, and the
+# wave's decode tail.  120 epochs at the canonical run length; the arc
+# shape matches the hysteresis-aware geometry the predictor gate is sized
+# against (traffic.shift_scenario): the sync gap lands past the hold
+# window, so reactive predictors un-boost on it and pay the lockout for
+# the second decode burst while the KF's posterior rides the gap.
+SERVE_SCHEDULE: tuple[tuple[str, int], ...] = (
+    ("prefill", 12), ("decode", 10), ("sync", 2), ("decode", 6),
+) * 4
+
+
+def demand_from_costs(
+    phase_costs: dict,
+    schedule: tuple[tuple[str, int], ...] = SERVE_SCHEDULE,
+    roofline: ChipletRoofline = ChipletRoofline(),
+    name: str = "hlo_serve",
+) -> RecordedTrace:
+    """Assemble per-epoch demand rows from per-phase HLO costs.
+
+    phase_costs — {phase_name: cost dict from `step_cost`}; the schedule
+    may additionally reference the builtin zero-demand phase "sync".
+    Rows are deterministic: rate_lo == rate_hi, Markov phase pinned low.
+    """
+    rates = {"sync": 0.0}
+    for phase, cost in phase_costs.items():
+        rates[phase] = roofline.gpu_rate(cost["flops"], cost["bytes"])
+    n_epochs = sum(n for _, n in schedule)
+    gpu = np.empty((n_epochs,), np.float32)
+    pos = 0
+    for phase, n in schedule:
+        if phase not in rates:
+            raise ValueError(
+                f"schedule phase {phase!r} has no cost entry; have "
+                f"{sorted(rates)}"
+            )
+        gpu[pos:pos + n] = rates[phase]
+        pos += n
+    rows = WorkloadProfile(
+        gpu_rate_lo=gpu,
+        gpu_rate_hi=gpu.copy(),
+        p_enter=np.zeros((n_epochs,), np.float32),
+        p_exit=np.ones((n_epochs,), np.float32),
+        cpu_rate=np.full((n_epochs,), roofline.cpu_rate, np.float32),
+    )
+    meta = {
+        "adapter": "hlo_cost",
+        "roofline": dataclasses.asdict(roofline),
+        "schedule": [[p, int(n)] for p, n in schedule],
+        "phases": {
+            p: dict(c, rate=float(rates[p]),
+                    intensity=float(roofline.intensity(c["flops"],
+                                                       c["bytes"])))
+            for p, c in phase_costs.items()
+        },
+    }
+    return RecordedTrace(demand=rows, fit="exact", name=name, meta=meta)
+
+
+def hlo_serving_trace(
+    cfg=None,
+    schedule: tuple[tuple[str, int], ...] = SERVE_SCHEDULE,
+    roofline: ChipletRoofline = ChipletRoofline(),
+    *,
+    seq: int = 256,
+    prefill_batch: int = 2,
+    decode_batch: int = 4,
+    name: str = "hlo_serve",
+) -> RecordedTrace:
+    """The end-to-end adapter: lower this repo's own prefill/decode steps,
+    cost them, and emit the serving-demand trace."""
+    costs = {
+        "prefill": step_cost("prefill", cfg, seq=seq, batch=prefill_batch),
+        "decode": step_cost("decode", cfg, seq=seq, batch=decode_batch),
+    }
+    return demand_from_costs(costs, schedule, roofline, name=name)
+
+
+def register_hlo_workload(name: str = "HLO_SERVE", overwrite: bool = False,
+                          **kwargs) -> RecordedTrace:
+    """Build the serving trace and register it as a named sweep workload."""
+    from repro.core.noc.traffic import register_workload
+
+    trace = hlo_serving_trace(name=name.lower(), **kwargs)
+    register_workload(name, trace, overwrite=overwrite)
+    return trace

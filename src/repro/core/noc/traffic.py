@@ -21,24 +21,40 @@ shares one compiled program (DESIGN.md §4).  Profile names live in the
 ``PROFILES`` dict keys.  ``stack_profiles`` builds the batched (B,)-leaf
 profile pytree consumed by ``sim.simulate_batch``.
 
-Scenario schedules (DESIGN.md §12)
-----------------------------------
-Real chiplet workloads are not stationary: programs phase-shift (SHIFT's
-compute relocation), ramp, and time-multiplex.  ``ScenarioSchedule``
-expresses a *workload program* as piecewise segments — each a base profile,
-optionally ramping into another and/or pinning the Markov burst phase —
-and ``materialize`` lowers any workload (plain profile or schedule) to a
-per-epoch ``WorkloadProfile`` whose leaves are ``(n_epochs,)`` rows of
-``(rate_lo, rate_hi, p_enter, p_exit, cpu_rate)``.  The simulator feeds
-those rows through its epoch scan as ``xs``, so scenario points share the
-same single compiled program as stationary ones.  Named scenarios live in
-``SCENARIOS``; ``lookup_workload`` resolves a name from either table.
+TrafficSource protocol (DESIGN.md §15)
+--------------------------------------
+Every demand input implements one protocol: ``epoch_demand(n_epochs)``
+lowers the source to the canonical ``EpochDemand`` — a ``WorkloadProfile``
+whose leaves are ``(n_epochs,)`` float32 rows of ``(rate_lo, rate_hi,
+p_enter, p_exit, cpu_rate)``, exactly the pytree the simulator consumes
+through its epoch scan ``xs``.  Three implementations ship here:
+
+  * ``WorkloadProfile``   — stationary rates, broadcast across epochs;
+  * ``ScenarioSchedule``  — piecewise synthetic programs (DESIGN.md §12):
+    each ``Segment`` is a base profile, optionally ramping into another
+    and/or pinning the Markov burst phase;
+  * ``RecordedTrace``     — replayed per-epoch demand rows captured from a
+    previous run (`repro.obs.recorder.TraceRecorder`), loaded from the
+    versioned npz trace schema, or synthesized by the HLO-cost adapter
+    (`repro.core.noc.trace_adapters`) — with tile/stretch fit controls so
+    the trace length need not match ``n_epochs``.
+
+``resolve_source`` is the one lowering path the simulator entry points
+call; because every source lowers to the same per-epoch-xs pytree, all
+source kinds share the simulator's ONE compiled program.  Names resolve
+through the workload registry: ``PROFILES`` and ``SCENARIOS`` plus
+anything added via ``register_workload`` / ``register_trace`` (recorded
+trace files become first-class sweep workloads).  ``materialize`` is the
+deprecated pre-§15 spelling of ``resolve_source`` and accepts the same
+inputs for one more release.
 """
 from __future__ import annotations
 
 import dataclasses
+import difflib
+import json
 
-from typing import Iterable, NamedTuple
+from typing import Iterable, NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +77,29 @@ class WorkloadProfile(NamedTuple):
     # stable demand — a meaningful share of the ~8 pkt/cycle MC ingress,
     # so CPU and GPU classes genuinely contend during GPU bursts.
     cpu_rate: float | Array = 0.12
+
+    def epoch_demand(self, n_epochs: int) -> "WorkloadProfile":
+        """TrafficSource: broadcast stationary rates across the epoch axis.
+
+        Scalar leaves become constant ``(n_epochs,)`` float32 rows — the
+        same float32 values the scalar-leaf trace consumed, so the lowering
+        is value-invisible (pinned by tests/test_predictor_ablation.py).
+        Already-per-epoch leaves pass through after a length check, so a
+        materialized ``EpochDemand`` is itself a valid source.
+        """
+
+        def lower(x):
+            x = jnp.asarray(x, jnp.float32)
+            if x.ndim == 0:
+                return jnp.broadcast_to(x, (n_epochs,))
+            if x.shape != (n_epochs,):
+                raise ValueError(
+                    f"per-epoch profile leaf has shape {x.shape}, expected "
+                    f"({n_epochs},)"
+                )
+            return x
+
+        return jax.tree.map(lower, self)
 
 
 # Burstiness/demand ordering mirrors the paper's figures: BFS and MUM show the
@@ -216,35 +255,22 @@ class ScenarioSchedule:
             f: jnp.asarray(rows[f]) for f in WorkloadProfile._fields
         })
 
+    def epoch_demand(self, n_epochs: int) -> WorkloadProfile:
+        """TrafficSource: lower the schedule to per-epoch demand rows."""
+        return self.materialize(n_epochs)
+
 
 def materialize(
-    workload: str | WorkloadProfile | ScenarioSchedule, n_epochs: int
+    workload: "TrafficSourceLike", n_epochs: int
 ) -> WorkloadProfile:
-    """Lower any workload to the per-epoch (n_epochs,)-leaf form the
-    simulator consumes (names resolve via `lookup_workload`).
+    """Deprecated pre-§15 spelling of :func:`resolve_source`.
 
-    Stationary profiles broadcast each rate scalar across the epoch axis —
-    the same float32 values the scalar-leaf trace consumed, so the lowering
-    is value-invisible (pinned by tests/test_predictor_ablation.py).
-    Already-materialized profiles pass through after a length check.
+    Kept for one release so existing callers (and the old ad-hoc
+    ``str | WorkloadProfile | ScenarioSchedule`` union) keep working; new
+    code should call ``resolve_source`` directly, which also accepts
+    ``RecordedTrace`` and anything else implementing ``TrafficSource``.
     """
-    if isinstance(workload, str):
-        workload = lookup_workload(workload)
-    if isinstance(workload, ScenarioSchedule):
-        return workload.materialize(n_epochs)
-
-    def lower(x):
-        x = jnp.asarray(x, jnp.float32)
-        if x.ndim == 0:
-            return jnp.broadcast_to(x, (n_epochs,))
-        if x.shape != (n_epochs,):
-            raise ValueError(
-                f"per-epoch profile leaf has shape {x.shape}, expected "
-                f"({n_epochs},)"
-            )
-        return x
-
-    return jax.tree.map(lower, workload)
+    return resolve_source(workload, n_epochs)
 
 
 def phase_shift(
@@ -383,13 +409,324 @@ SCENARIOS: dict[str, ScenarioSchedule] = {
 }
 
 
-def lookup_workload(name: str) -> WorkloadProfile | ScenarioSchedule:
-    """Resolve a workload name from PROFILES or SCENARIOS."""
+# ---------------------------------------------------------------------------
+# TrafficSource protocol, recorded traces, and the workload registry
+# (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class TrafficSource(Protocol):
+    """Anything that can lower itself to per-epoch demand rows.
+
+    ``epoch_demand(n_epochs)`` must return an ``EpochDemand``: a
+    ``WorkloadProfile`` whose five leaves are ``(n_epochs,)`` float32 rows.
+    ``resolve_source`` validates that contract after the call, so custom
+    sources cannot silently feed the simulator a second program shape.
+    """
+
+    def epoch_demand(self, n_epochs: int) -> WorkloadProfile:
+        ...
+
+
+# The canonical lowered form: a WorkloadProfile whose leaves are
+# (n_epochs,) float32 rows — one parameter row per epoch, consumed by the
+# simulator's epoch scan as `xs`.  An alias, not a subclass: EpochDemand
+# must remain pytree-identical to WorkloadProfile so every source kind
+# shares the simulator's single compiled program.
+EpochDemand = WorkloadProfile
+
+# Versioned npz trace schema (DESIGN.md §15).  A trace file is a plain
+# npz (no pickling) with:
+#   schema          — the literal "noc_demand_trace"
+#   schema_version  — int, currently 1
+#   name            — short trace name (informational)
+#   meta_json       — JSON dict of provenance (recorder config, adapter
+#                     parameters, source workload, ...)
+#   demand_<field>  — (T,) float32 row per WorkloadProfile field
+TRACE_SCHEMA = "noc_demand_trace"
+TRACE_SCHEMA_VERSION = 1
+
+_FIT_MODES = ("exact", "tile", "stretch")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecordedTrace:
+    """A replayed per-epoch demand trace (TrafficSource implementation).
+
+    ``demand`` holds the recorded rows as a ``WorkloadProfile`` of ``(T,)``
+    float32 numpy leaves.  ``fit`` controls how a trace of length ``T`` is
+    fitted to a run of ``n_epochs`` epochs:
+
+      * ``"exact"``   — require ``T == n_epochs`` (the bitwise-replay mode);
+      * ``"tile"``    — repeat the trace cyclically (epoch ``e`` reads row
+                        ``e % T``);
+      * ``"stretch"`` — linearly resample the rows onto ``n_epochs`` points
+                        (preserves the trace's shape, not its timing).
+
+    When ``T == n_epochs`` every mode passes the rows through untouched,
+    so a trace recorded from a run replays bitwise-identical to that run
+    regardless of ``fit``.
+    """
+
+    demand: WorkloadProfile
+    fit: str = "exact"
+    name: str = "trace"
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.fit not in _FIT_MODES:
+            raise ValueError(
+                f"fit must be one of {_FIT_MODES}, got {self.fit!r}"
+            )
+        rows = {}
+        length = None
+        for f in WorkloadProfile._fields:
+            row = np.asarray(getattr(self.demand, f), np.float32)
+            if row.ndim == 0:
+                raise ValueError(
+                    f"RecordedTrace leaf {f!r} is a scalar; recorded demand "
+                    "must be per-epoch (T,) rows — use WorkloadProfile for "
+                    "stationary sources"
+                )
+            if row.ndim != 1:
+                raise ValueError(
+                    f"RecordedTrace leaf {f!r} has shape {row.shape}, "
+                    "expected (T,)"
+                )
+            if length is None:
+                length = row.shape[0]
+            elif row.shape[0] != length:
+                raise ValueError(
+                    f"RecordedTrace leaves disagree on length: {f!r} has "
+                    f"{row.shape[0]}, expected {length}"
+                )
+            rows[f] = row
+        if length == 0:
+            raise ValueError("RecordedTrace needs at least one epoch row")
+        object.__setattr__(self, "demand", WorkloadProfile(**rows))
+
+    @property
+    def n_epochs_recorded(self) -> int:
+        return int(np.asarray(self.demand.gpu_rate_lo).shape[0])
+
+    def epoch_demand(self, n_epochs: int) -> WorkloadProfile:
+        """TrafficSource: fit the recorded rows to ``n_epochs`` epochs."""
+        T = self.n_epochs_recorded
+        if T == n_epochs:
+            rows = {f: np.asarray(getattr(self.demand, f))
+                    for f in WorkloadProfile._fields}
+        elif self.fit == "exact":
+            raise ValueError(
+                f"trace {self.name!r} has {T} recorded epochs but the run "
+                f"wants {n_epochs}; use fit='tile' or fit='stretch' to "
+                "adapt it"
+            )
+        elif self.fit == "tile":
+            idx = np.arange(n_epochs) % T
+            rows = {f: np.asarray(getattr(self.demand, f))[idx]
+                    for f in WorkloadProfile._fields}
+        else:  # stretch: linear resample onto n_epochs sample points
+            src = np.linspace(0.0, 1.0, T, dtype=np.float64)
+            dst = np.linspace(0.0, 1.0, n_epochs, dtype=np.float64)
+            rows = {
+                f: np.interp(
+                    dst, src, np.asarray(getattr(self.demand, f), np.float64)
+                ).astype(np.float32)
+                for f in WorkloadProfile._fields
+            }
+        return WorkloadProfile(**{
+            f: jnp.asarray(rows[f], jnp.float32)
+            for f in WorkloadProfile._fields
+        })
+
+    def with_fit(self, fit: str) -> "RecordedTrace":
+        return dataclasses.replace(self, fit=fit)
+
+    def save(self, path) -> None:
+        """Write the trace as a versioned npz file (no pickling)."""
+        payload = {
+            "schema": TRACE_SCHEMA,
+            "schema_version": np.int64(TRACE_SCHEMA_VERSION),
+            "name": self.name,
+            "meta_json": json.dumps(self.meta, sort_keys=True),
+        }
+        for f in WorkloadProfile._fields:
+            payload[f"demand_{f}"] = np.asarray(
+                getattr(self.demand, f), np.float32
+            )
+        np.savez(path, **payload)
+
+    @classmethod
+    def load(cls, path, fit: str = "exact") -> "RecordedTrace":
+        """Load a trace written by :meth:`save` (schema-validated)."""
+        with np.load(path, allow_pickle=False) as data:
+            problems = validate_trace_npz(data)
+            if problems:
+                raise ValueError(
+                    f"{path}: not a valid {TRACE_SCHEMA} file: "
+                    + "; ".join(problems)
+                )
+            demand = WorkloadProfile(**{
+                f: np.asarray(data[f"demand_{f}"], np.float32)
+                for f in WorkloadProfile._fields
+            })
+            name = str(np.asarray(data["name"]).item())
+            meta = json.loads(str(np.asarray(data["meta_json"]).item()))
+        return cls(demand=demand, fit=fit, name=name, meta=meta)
+
+
+def validate_trace_npz(data) -> list[str]:
+    """Return schema problems for an opened npz mapping ([] when valid)."""
+    problems = []
+    keys = set(getattr(data, "files", data.keys()))
+    for key in ("schema", "schema_version", "name", "meta_json"):
+        if key not in keys:
+            problems.append(f"missing key {key!r}")
+    if "schema" in keys:
+        schema = str(np.asarray(data["schema"]).item())
+        if schema != TRACE_SCHEMA:
+            problems.append(f"schema is {schema!r}, expected {TRACE_SCHEMA!r}")
+    if "schema_version" in keys:
+        version = int(np.asarray(data["schema_version"]).item())
+        if version > TRACE_SCHEMA_VERSION:
+            problems.append(
+                f"schema_version {version} is newer than supported "
+                f"{TRACE_SCHEMA_VERSION}"
+            )
+    length = None
+    for f in WorkloadProfile._fields:
+        key = f"demand_{f}"
+        if key not in keys:
+            problems.append(f"missing key {key!r}")
+            continue
+        row = np.asarray(data[key])
+        if row.ndim != 1 or row.shape[0] == 0:
+            problems.append(f"{key} has shape {row.shape}, expected (T,)")
+        elif length is None:
+            length = row.shape[0]
+        elif row.shape[0] != length:
+            problems.append(
+                f"{key} has length {row.shape[0]}, expected {length}"
+            )
+        if row.size and not np.all(np.isfinite(row)):
+            problems.append(f"{key} contains non-finite values")
+    if "meta_json" in keys:
+        try:
+            meta = json.loads(str(np.asarray(data["meta_json"]).item()))
+            if not isinstance(meta, dict):
+                problems.append("meta_json is not a JSON object")
+        except (json.JSONDecodeError, ValueError):
+            problems.append("meta_json is not valid JSON")
+    return problems
+
+
+# Workload registry: names registered here share the SweepSpec.workload
+# namespace with PROFILES and SCENARIOS and win on collision (so a
+# registered trace can shadow a builtin for an experiment).
+_REGISTRY: dict[str, "TrafficSource"] = {}
+
+
+def register_workload(
+    name: str, source: "TrafficSource", overwrite: bool = False
+) -> None:
+    """Register a named workload (any TrafficSource, e.g. a RecordedTrace).
+
+    Refuses to shadow an existing registered/builtin name unless
+    ``overwrite=True``.
+    """
+    if not isinstance(source, TrafficSource):
+        raise TypeError(
+            f"source for {name!r} does not implement TrafficSource "
+            "(needs an epoch_demand(n_epochs) method)"
+        )
+    if not overwrite and (
+        name in _REGISTRY or name in PROFILES or name in SCENARIOS
+    ):
+        raise ValueError(
+            f"workload {name!r} already exists; pass overwrite=True to "
+            "replace it"
+        )
+    _REGISTRY[name] = source
+
+
+def register_trace(
+    name: str, path, fit: str = "exact", overwrite: bool = False
+) -> RecordedTrace:
+    """Load a trace file and register it as a named workload."""
+    trace = RecordedTrace.load(path, fit=fit)
+    register_workload(name, trace, overwrite=overwrite)
+    return trace
+
+
+def unregister_workload(name: str) -> None:
+    """Remove a registered workload (builtins are untouchable)."""
+    _REGISTRY.pop(name, None)
+
+
+def lookup_workload(name: str) -> "TrafficSource":
+    """Resolve a workload name from the registry, PROFILES, or SCENARIOS.
+
+    Unknown names raise ``ValueError`` listing close matches across all
+    three namespaces (registered traces included).
+    """
+    if name in _REGISTRY:
+        return _REGISTRY[name]
     if name in PROFILES:
         return PROFILES[name]
     if name in SCENARIOS:
         return SCENARIOS[name]
-    raise KeyError(
-        f"unknown workload {name!r}; profiles: {sorted(PROFILES)}, "
-        f"scenarios: {sorted(SCENARIOS)}"
+    known = sorted({*PROFILES, *SCENARIOS, *_REGISTRY})
+    near = difflib.get_close_matches(name, known, n=3, cutoff=0.4)
+    hint = f"; did you mean {near}?" if near else ""
+    raise ValueError(
+        f"unknown workload {name!r}{hint} (known workloads: {known})"
     )
+
+
+def resolve_source(source: "TrafficSourceLike", n_epochs: int) -> EpochDemand:
+    """Lower any demand source to the canonical EpochDemand pytree.
+
+    The ONE resolution path used by ``simulate`` / ``simulate_with_trace``
+    / ``simulate_batch`` / ``sweep``:
+
+      * ``str``           — resolved via :func:`lookup_workload` (registry,
+                            PROFILES, SCENARIOS);
+      * ``TrafficSource`` — anything with ``epoch_demand(n_epochs)``:
+                            ``WorkloadProfile``, ``ScenarioSchedule``,
+                            ``RecordedTrace``, or a custom source;
+      * bare 5-tuples     — deprecation shim for the pre-§15 union: coerced
+                            to ``WorkloadProfile`` for one release.
+
+    The result is validated to have exactly ``(n_epochs,)`` float32 leaves,
+    so every source kind feeds the simulator the same program shape.
+    """
+    if isinstance(source, str):
+        source = lookup_workload(source)
+    if not isinstance(source, TrafficSource):
+        if isinstance(source, tuple) and len(source) == len(
+            WorkloadProfile._fields
+        ):
+            # pre-§15 callers could pass any profile-shaped tuple
+            source = WorkloadProfile(*source)
+        else:
+            raise TypeError(
+                f"cannot resolve demand source of type "
+                f"{type(source).__name__}; expected a workload name, "
+                "WorkloadProfile, ScenarioSchedule, RecordedTrace, or any "
+                "TrafficSource"
+            )
+    demand = source.epoch_demand(n_epochs)
+    for f in WorkloadProfile._fields:
+        leaf = getattr(demand, f)
+        if tuple(leaf.shape) != (n_epochs,) or leaf.dtype != jnp.float32:
+            raise ValueError(
+                f"source {type(source).__name__} produced leaf {f!r} with "
+                f"shape {leaf.shape} dtype {leaf.dtype}; EpochDemand needs "
+                f"({n_epochs},) float32"
+            )
+    return demand
+
+
+# The union accepted by resolve_source (and, transitionally, the old
+# entry-point signatures): a workload name or any TrafficSource.
+TrafficSourceLike = str | WorkloadProfile | ScenarioSchedule | RecordedTrace

@@ -11,7 +11,12 @@ Three layers, all opt-in and zero-cost when off:
                    validator that benchmarks/check_bench.py enforces.
   * profiling.py — jax.profiler trace contexts behind the fig drivers'
                    `--profile DIR` flag.
+  * recorder.py  — `TraceRecorder`: captures the per-epoch demand rows of
+                   any run as a replayable `traffic.RecordedTrace`
+                   (DESIGN.md §15), optionally stamped with the observed
+                   §14 telemetry digest.
 """
 
 from repro.obs.probes import ProbeConfig, SimTrace
-from repro.obs import ledger, profiling
+from repro.obs import ledger, profiling, recorder
+from repro.obs.recorder import TraceRecorder

@@ -216,8 +216,12 @@ def test_schedule_validation():
         ScenarioSchedule((Segment(0.25, "PATH"),))
     with pytest.raises(ValueError, match="at least one"):
         ScenarioSchedule(())
-    with pytest.raises(KeyError, match="unknown workload"):
+    # §15 bugfix: unknown names raise ValueError (was a bare KeyError),
+    # listing near-misses when any exist
+    with pytest.raises(ValueError, match="unknown workload"):
         sim.run_workload("kf", "NOT_A_WORKLOAD", **FAST)
+    with pytest.raises(ValueError, match="did you mean"):
+        sim.run_workload("kf", "SHIFT_PATH_BSF", **FAST)
     with pytest.raises(ValueError, match="shape"):
         bad = materialize(PROFILES["PATH"], 6)
         sim.simulate(NoCConfig(mode="kf", **FAST), bad)  # 6 rows, 8 epochs

@@ -1,0 +1,532 @@
+"""TrafficSource protocol + trace-driven demand replay (DESIGN.md §15).
+
+Contracts pinned here:
+
+  1. every source kind — workload name, `WorkloadProfile`,
+     `ScenarioSchedule`, `RecordedTrace`, bare 5-tuple shim, or a custom
+     object implementing the protocol — lowers through ONE path
+     (`resolve_source`) to the same `(n_epochs,)` float32 EpochDemand
+     pytree;
+  2. a trace recorded from scenario X replays bitwise-identical to
+     running X directly, including through the npz file round trip
+     (`TraceRecorder` capture -> save -> load -> simulate);
+  3. mixed source kinds in ONE sweep still share a single compiled
+     program (`sim.trace_count() == 1`);
+  4. the workload registry: collision refusal, overwrite, unregister,
+     and near-miss suggestions on unknown names (the old bare-KeyError
+     bug);
+  5. `RecordedTrace` fit modes (exact / tile / stretch) and the
+     versioned npz schema validation;
+  6. the HLO-cost adapter's roofline mapping, and the real lowered
+     prefill/decode steps landing on opposite sides of machine balance
+     (calm prefill vs saturating decode — the property the serving
+     schedule's gate geometry relies on).
+"""
+import dataclasses
+import io
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.noc import sim, trace_adapters
+from repro.core.noc.sim import NoCConfig, SweepSpec
+from repro.core.noc.traffic import (
+    PROFILES,
+    SCENARIOS,
+    TRACE_SCHEMA,
+    TRACE_SCHEMA_VERSION,
+    EpochDemand,
+    RecordedTrace,
+    ScenarioSchedule,
+    TrafficSource,
+    WorkloadProfile,
+    lookup_workload,
+    materialize,
+    register_trace,
+    register_workload,
+    resolve_source,
+    unregister_workload,
+    validate_trace_npz,
+)
+from repro.obs.recorder import TraceRecorder, capture_demand
+
+FAST = dict(n_epochs=8, epoch_len=100)
+N = FAST["n_epochs"]
+
+
+def _rows_equal(a: WorkloadProfile, b: WorkloadProfile, bitwise=True):
+    for f in WorkloadProfile._fields:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        if bitwise:
+            np.testing.assert_array_equal(x, y, err_msg=f"leaf {f}")
+        else:
+            np.testing.assert_allclose(x, y, rtol=1e-6, err_msg=f"leaf {f}")
+
+
+def _results_bitwise_equal(res, ref, label):
+    for (path, a), b in zip(jax.tree_util.tree_leaves_with_path(ref),
+                            jax.tree.leaves(res)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"{label}: leaf {jax.tree_util.keystr(path)} diverged"
+        )
+
+
+def _ramp_trace(T=4, fit="exact", name="ramp") -> RecordedTrace:
+    """A tiny trace with per-epoch-distinct rows (easy to index-check)."""
+    t = np.arange(T, dtype=np.float32)
+    return RecordedTrace(
+        demand=WorkloadProfile(
+            gpu_rate_lo=0.01 * t,
+            gpu_rate_hi=0.10 + 0.01 * t,
+            p_enter=np.full(T, 0.5, np.float32),
+            p_exit=np.full(T, 0.5, np.float32),
+            cpu_rate=np.full(T, 0.12, np.float32),
+        ),
+        fit=fit,
+        name=name,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1. resolve_source: one lowering path for every source kind
+# ---------------------------------------------------------------------------
+
+
+class TestResolveSource:
+    def test_every_kind_lowers_to_epoch_rows(self):
+        """Name, profile object, and bare tuple agree leaf-for-leaf."""
+        by_name = resolve_source("PATH", N)
+        by_obj = resolve_source(PROFILES["PATH"], N)
+        by_tuple = resolve_source(tuple(PROFILES["PATH"]), N)
+        assert isinstance(by_name, EpochDemand)
+        for demand in (by_name, by_obj, by_tuple):
+            for f in WorkloadProfile._fields:
+                leaf = getattr(demand, f)
+                assert leaf.shape == (N,) and leaf.dtype == np.float32
+        _rows_equal(by_name, by_obj)
+        _rows_equal(by_name, by_tuple)
+
+    def test_scenario_name_and_object_agree(self):
+        by_name = resolve_source("SHIFT_PATH_BFS", N)
+        by_obj = resolve_source(SCENARIOS["SHIFT_PATH_BFS"], N)
+        _rows_equal(by_name, by_obj)
+
+    def test_materialized_demand_is_itself_a_source(self):
+        """EpochDemand implements the protocol, so resolution is idempotent."""
+        demand = resolve_source("BFS", N)
+        assert isinstance(demand, TrafficSource)
+        _rows_equal(resolve_source(demand, N), demand)
+
+    def test_custom_protocol_object(self):
+        """Any object with epoch_demand(n) is a first-class source."""
+
+        class Sawtooth:
+            def epoch_demand(self, n_epochs):
+                t = np.arange(n_epochs, dtype=np.float32) / n_epochs
+                return WorkloadProfile(
+                    gpu_rate_lo=t * 0.1, gpu_rate_hi=t * 0.3,
+                    p_enter=np.zeros(n_epochs, np.float32),
+                    p_exit=np.ones(n_epochs, np.float32),
+                    cpu_rate=np.full(n_epochs, 0.12, np.float32),
+                ).epoch_demand(n_epochs)
+
+        assert isinstance(Sawtooth(), TrafficSource)
+        demand = resolve_source(Sawtooth(), N)
+        assert np.asarray(demand.gpu_rate_hi)[-1] == pytest.approx(
+            0.3 * (N - 1) / N)
+
+    def test_rejects_non_sources(self):
+        with pytest.raises(TypeError, match="cannot resolve demand source"):
+            resolve_source(42, N)
+        with pytest.raises(TypeError, match="cannot resolve"):
+            resolve_source(("PATH",), N)  # wrong-arity tuple is not a shim
+
+    def test_rejects_wrong_shape_from_custom_source(self):
+        """A source emitting the wrong epoch axis is caught at the boundary."""
+
+        class Liar:
+            def epoch_demand(self, n_epochs):
+                return PROFILES["PATH"].epoch_demand(n_epochs + 1)
+
+        with pytest.raises(ValueError, match="needs \\(8,\\) float32"):
+            resolve_source(Liar(), N)
+
+    def test_profile_rejects_wrong_length_per_epoch_leaf(self):
+        prof = PROFILES["PATH"]._replace(
+            gpu_rate_hi=np.ones(N + 2, np.float32))
+        with pytest.raises(ValueError, match="per-epoch profile leaf"):
+            resolve_source(prof, N)
+
+    def test_materialize_shim_matches_resolve_source(self):
+        """The deprecated pre-§15 entrypoint stays value-identical."""
+        _rows_equal(materialize("SHIFT_PATH_BFS", N),
+                    resolve_source("SHIFT_PATH_BFS", N))
+
+
+# ---------------------------------------------------------------------------
+# 2. workload registry + near-miss lookup
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_unknown_name_suggests_near_misses(self):
+        """ValueError (not bare KeyError) naming the close matches."""
+        with pytest.raises(ValueError) as ei:
+            lookup_workload("SHIFT_PATH_BSF")
+        msg = str(ei.value)
+        assert "SHIFT_PATH_BSF" in msg and "SHIFT_PATH_BFS" in msg
+        assert "did you mean" in msg
+
+    def test_unknown_name_without_near_miss_lists_known(self):
+        with pytest.raises(ValueError, match="known workloads"):
+            lookup_workload("zzzzqqqq")
+
+    def test_register_lookup_unregister(self):
+        trace = _ramp_trace(T=N)
+        try:
+            register_workload("RAMP_TEST_WL", trace)
+            assert lookup_workload("RAMP_TEST_WL") is trace
+            _rows_equal(resolve_source("RAMP_TEST_WL", N),
+                        trace.epoch_demand(N))
+        finally:
+            unregister_workload("RAMP_TEST_WL")
+        with pytest.raises(ValueError):
+            lookup_workload("RAMP_TEST_WL")
+
+    def test_collision_refused_unless_overwrite(self):
+        trace = _ramp_trace(T=N)
+        with pytest.raises(ValueError, match="already exists"):
+            register_workload("PATH", trace)  # builtin profile
+        with pytest.raises(ValueError, match="already exists"):
+            register_workload("SHIFT_PATH_BFS", trace)  # builtin scenario
+        try:
+            register_workload("PATH", trace, overwrite=True)
+            assert lookup_workload("PATH") is trace  # registry wins
+        finally:
+            unregister_workload("PATH")
+        assert lookup_workload("PATH") is PROFILES["PATH"]  # builtin restored
+
+    def test_register_rejects_non_source(self):
+        with pytest.raises(TypeError, match="TrafficSource"):
+            register_workload("BAD_WL", object())
+
+    def test_register_trace_from_file(self, tmp_path):
+        path = tmp_path / "ramp.npz"
+        _ramp_trace(T=N).save(path)
+        try:
+            trace = register_trace("RAMP_FILE_WL", path, fit="tile")
+            assert trace.fit == "tile"
+            assert lookup_workload("RAMP_FILE_WL") is trace
+        finally:
+            unregister_workload("RAMP_FILE_WL")
+
+
+# ---------------------------------------------------------------------------
+# 3. RecordedTrace: fit modes, construction guards, npz schema
+# ---------------------------------------------------------------------------
+
+
+class TestRecordedTrace:
+    def test_exact_passthrough_and_mismatch(self):
+        trace = _ramp_trace(T=N, fit="exact")
+        _rows_equal(trace.epoch_demand(N), trace.demand)
+        with pytest.raises(ValueError, match="fit='tile' or fit='stretch'"):
+            trace.epoch_demand(N + 1)
+
+    def test_tile_repeats_cyclically(self):
+        trace = _ramp_trace(T=4, fit="tile")
+        demand = trace.epoch_demand(10)
+        lo = np.asarray(demand.gpu_rate_lo)
+        expected = np.asarray(trace.demand.gpu_rate_lo)[
+            np.arange(10) % 4]
+        np.testing.assert_array_equal(lo, expected)
+
+    def test_stretch_resamples_linearly(self):
+        trace = _ramp_trace(T=4, fit="stretch")
+        demand = trace.epoch_demand(7)
+        lo = np.asarray(demand.gpu_rate_lo)
+        # the ramp 0..0.03 over 4 points resampled to 7 stays a ramp
+        np.testing.assert_allclose(
+            lo, np.linspace(0.0, 0.03, 7), rtol=1e-5)
+
+    def test_all_fits_passthrough_when_lengths_match(self):
+        """T == n_epochs short-circuits every fit mode bitwise."""
+        for fit in ("exact", "tile", "stretch"):
+            trace = _ramp_trace(T=N, fit=fit)
+            _rows_equal(trace.epoch_demand(N), trace.demand)
+
+    def test_with_fit(self):
+        trace = _ramp_trace(T=4)
+        assert trace.with_fit("stretch").fit == "stretch"
+        with pytest.raises(ValueError, match="fit must be one of"):
+            trace.with_fit("nearest")
+
+    def test_rejects_scalar_ragged_empty(self):
+        with pytest.raises(ValueError, match="scalar"):
+            RecordedTrace(demand=PROFILES["PATH"])
+        ragged = _ramp_trace(T=4).demand._replace(
+            cpu_rate=np.zeros(5, np.float32))
+        with pytest.raises(ValueError, match="disagree on length"):
+            RecordedTrace(demand=ragged)
+        empty = jax.tree.map(lambda x: np.asarray(x)[:0],
+                             _ramp_trace(T=4).demand)
+        with pytest.raises(ValueError, match="at least one epoch"):
+            RecordedTrace(demand=empty)
+
+    def test_npz_roundtrip_preserves_everything(self, tmp_path):
+        path = tmp_path / "trace.npz"
+        meta = {"source": "unit", "n_epochs": 4, "nested": {"a": [1, 2]}}
+        trace = dataclasses.replace(_ramp_trace(T=4, name="rt"), meta=meta)
+        trace.save(path)
+        loaded = RecordedTrace.load(path, fit="tile")
+        assert loaded.name == "rt" and loaded.fit == "tile"
+        assert loaded.meta == meta
+        _rows_equal(loaded.demand, trace.demand)
+
+    def test_load_rejects_non_trace_npz(self, tmp_path):
+        path = tmp_path / "other.npz"
+        np.savez(path, schema="something_else", schema_version=1,
+                 name="x", meta_json="{}")
+        with pytest.raises(ValueError, match=TRACE_SCHEMA):
+            RecordedTrace.load(path)
+
+
+class TestTraceSchemaValidation:
+    def _valid_payload(self, T=4):
+        payload = {
+            "schema": np.asarray(TRACE_SCHEMA),
+            "schema_version": np.asarray(TRACE_SCHEMA_VERSION),
+            "name": np.asarray("t"),
+            "meta_json": np.asarray("{}"),
+        }
+        for f in WorkloadProfile._fields:
+            payload[f"demand_{f}"] = np.zeros(T, np.float32)
+        return payload
+
+    def test_valid_payload_passes(self):
+        assert validate_trace_npz(self._valid_payload()) == []
+
+    def test_missing_keys_flagged(self):
+        payload = self._valid_payload()
+        del payload["schema_version"], payload["demand_cpu_rate"]
+        problems = "; ".join(validate_trace_npz(payload))
+        assert "schema_version" in problems
+        assert "demand_cpu_rate" in problems
+
+    def test_wrong_schema_and_future_version(self):
+        payload = self._valid_payload()
+        payload["schema"] = np.asarray("not_a_trace")
+        payload["schema_version"] = np.asarray(TRACE_SCHEMA_VERSION + 1)
+        problems = "; ".join(validate_trace_npz(payload))
+        assert "not_a_trace" in problems and "newer than supported" in problems
+
+    def test_ragged_and_nonfinite_rows(self):
+        payload = self._valid_payload(T=4)
+        payload["demand_p_exit"] = np.zeros(6, np.float32)
+        bad = np.zeros(4, np.float32)
+        bad[2] = np.nan
+        payload["demand_cpu_rate"] = bad
+        problems = "; ".join(validate_trace_npz(payload))
+        assert "length" in problems and "non-finite" in problems
+
+    def test_scalar_row_and_bad_meta(self):
+        payload = self._valid_payload()
+        payload["demand_gpu_rate_lo"] = np.float32(0.1)
+        payload["meta_json"] = np.asarray("{not json")
+        problems = "; ".join(validate_trace_npz(payload))
+        assert "expected (T,)" in problems and "not valid JSON" in problems
+
+    def test_real_file_validates_via_np_load(self, tmp_path):
+        path = tmp_path / "t.npz"
+        _ramp_trace(T=3).save(path)
+        with np.load(path, allow_pickle=False) as data:
+            assert validate_trace_npz(data) == []
+
+    def test_save_never_pickles(self, tmp_path):
+        """meta with nested structures still loads under allow_pickle=False."""
+        path = tmp_path / "t.npz"
+        trace = dataclasses.replace(
+            _ramp_trace(T=3), meta={"deep": {"list": [1.5, "s"]}})
+        trace.save(path)
+        buf = io.BytesIO(path.read_bytes())
+        with np.load(buf, allow_pickle=False) as data:
+            meta = json.loads(str(np.asarray(data["meta_json"]).item()))
+        assert meta == {"deep": {"list": [1.5, "s"]}}
+
+
+# ---------------------------------------------------------------------------
+# 4. record -> replay: the bitwise contract
+# ---------------------------------------------------------------------------
+
+
+class TestRecordReplay:
+    def test_scenario_capture_replays_bitwise(self):
+        """TraceRecorder capture of scenario X == running X, bit for bit."""
+        cfg = NoCConfig(mode="kf", **FAST)
+        trace = TraceRecorder(observe=False).record(cfg, "SHIFT_PATH_BFS")
+        assert trace.n_epochs_recorded == N and trace.fit == "exact"
+        ref = sim.simulate(cfg, "SHIFT_PATH_BFS")
+        rep = sim.simulate(cfg, trace)
+        _results_bitwise_equal(rep, ref, "scenario capture replay")
+
+    def test_capture_survives_npz_roundtrip_bitwise(self, tmp_path):
+        """record -> save -> load -> simulate is still bitwise identical."""
+        path = tmp_path / "capture.npz"
+        cfg = NoCConfig(mode="kf", **FAST)
+        TraceRecorder(name="rr", observe=False).record_to(
+            path, cfg, "SHIFT_PATH_BFS")
+        loaded = RecordedTrace.load(path)
+        ref = sim.simulate(cfg, "SHIFT_PATH_BFS")
+        rep = sim.simulate(cfg, loaded)
+        _results_bitwise_equal(rep, ref, "npz roundtrip replay")
+
+    def test_capture_meta_provenance(self):
+        cfg = NoCConfig(mode="fair", seed=7, **FAST)
+        trace = TraceRecorder(observe=False).record(cfg, "PATH")
+        meta = trace.meta
+        assert meta["source"] == "PATH" and meta["mode"] == "fair"
+        assert meta["n_epochs"] == N and meta["seed"] == 7
+
+    def test_observing_capture_attaches_telemetry(self):
+        """observe=True rides the §14 flight recorder without changing rows."""
+        cfg = NoCConfig(mode="kf", **FAST)
+        silent = TraceRecorder(observe=False).record(cfg, "PATH")
+        observed = TraceRecorder(observe=True).record(cfg, "PATH")
+        _rows_equal(observed.demand, silent.demand)
+        assert "observed" in observed.meta and "result" in observed.meta
+        assert "observed" not in silent.meta
+
+    def test_capture_demand_oneshot(self, tmp_path):
+        path = tmp_path / "one.npz"
+        cfg = NoCConfig(mode="baseline", **FAST)
+        trace = capture_demand(cfg, "BFS", path=path, name="one")
+        assert path.exists()
+        _rows_equal(RecordedTrace.load(path).demand, trace.demand)
+
+
+# ---------------------------------------------------------------------------
+# 5. mixed sources through the sweep: one compiled program
+# ---------------------------------------------------------------------------
+
+
+class TestSweepIntegration:
+    def test_mixed_source_kinds_share_one_trace(self):
+        """Profile + scenario + registered trace in one sweep: 1 trace."""
+        trace = _ramp_trace(T=N, name="mix")
+        try:
+            register_workload("MIX_TRACE_WL", trace)
+            specs = [
+                SweepSpec("kf", wl, seed=s)
+                for wl in ("PATH", "SHIFT_PATH_BFS", "MIX_TRACE_WL")
+                for s in (0, 1)
+            ]
+            sim.reset_trace_count()
+            rows = sim.sweep(specs, **FAST)
+            # <= 1: an earlier test with the same dims may have warmed the
+            # jit cache, in which case the mixed grid adds ZERO traces
+            assert sim.trace_count() <= 1
+        finally:
+            unregister_workload("MIX_TRACE_WL")
+        # the trace-backed row equals its standalone simulate
+        cfg = NoCConfig(mode="kf", seed=0, **FAST)
+        ref = sim.simulate(cfg, trace)
+        _results_bitwise_equal(rows[4], ref, "trace row in mixed sweep")
+
+    def test_simulate_batch_single_source_broadcast(self):
+        """One source object fans out across the batch (tuple-safe)."""
+        cfgs = [NoCConfig(mode="baseline", seed=s, **FAST) for s in (0, 1)]
+        batch = sim.simulate_batch(cfgs, PROFILES["PATH"])
+        per = [sim.simulate(c, "PATH") for c in cfgs]
+        for i, ref in enumerate(per):
+            row = jax.tree.map(lambda x: x[i], batch)
+            _results_bitwise_equal(row, ref, f"broadcast row {i}")
+
+
+# ---------------------------------------------------------------------------
+# 6. HLO-cost adapter
+# ---------------------------------------------------------------------------
+
+
+class TestHloAdapter:
+    def test_roofline_mapping(self):
+        r = trace_adapters.ChipletRoofline()
+        balance = r.peak_flops_per_cycle / r.peak_hbm_bytes_per_cycle
+        # memory-bound: intensity saturates at 1, rate at peak
+        assert r.intensity(flops=1.0, bytes_moved=1e6) == pytest.approx(1.0)
+        assert r.gpu_rate(1.0, 1e6) == pytest.approx(r.peak_rate)
+        # exactly at machine balance: still fully memory-bound
+        assert r.intensity(balance * 64.0, 64.0) == pytest.approx(1.0)
+        # compute-bound at 4x balance: quarter intensity
+        assert r.intensity(4 * balance * 64.0, 64.0) == pytest.approx(0.25)
+        assert r.intensity(0.0, 0.0) == 0.0
+
+    def test_demand_from_costs_schedule_layout(self):
+        costs = {
+            "prefill": {"flops": 4096.0, "bytes": 64.0},   # 16x balance
+            "decode": {"flops": 1.0, "bytes": 1024.0},     # memory-bound
+        }
+        schedule = (("prefill", 3), ("decode", 2), ("sync", 1))
+        trace = trace_adapters.demand_from_costs(costs, schedule,
+                                                 name="unit")
+        assert trace.n_epochs_recorded == 6
+        lo = np.asarray(trace.demand.gpu_rate_lo)
+        r = trace_adapters.ChipletRoofline()
+        np.testing.assert_allclose(lo[:3], r.peak_rate / 16, rtol=1e-6)
+        np.testing.assert_allclose(lo[3:5], r.peak_rate, rtol=1e-6)
+        assert lo[5] == 0.0  # sync carries no GPU fabric demand
+        # deterministic rows: no Markov dynamics in a replayed trace
+        np.testing.assert_array_equal(lo, np.asarray(trace.demand.gpu_rate_hi))
+        assert np.all(np.asarray(trace.demand.p_enter) == 0.0)
+        assert np.all(np.asarray(trace.demand.p_exit) == 1.0)
+        assert trace.meta["phases"]["decode"]["intensity"] == pytest.approx(
+            1.0)
+
+    def test_demand_from_costs_unknown_phase(self):
+        with pytest.raises(ValueError, match="no cost entry"):
+            trace_adapters.demand_from_costs(
+                {"prefill": {"flops": 1.0, "bytes": 1.0}},
+                (("warmup", 2),))
+
+    def test_real_steps_straddle_machine_balance(self):
+        """Lowered prefill is compute-bound, decode memory-bound.
+
+        This is the adapter's load-bearing property: the serving schedule
+        only produces the calm/saturating arcs the predictor gate needs if
+        the repo's own prefill and decode HLO sit on opposite sides of the
+        roofline knee.
+        """
+        prefill = trace_adapters.step_cost("prefill", batch=2)
+        decode = trace_adapters.step_cost("decode", batch=4)
+        assert prefill["flops"] > 0 and prefill["bytes"] > 0
+        assert decode["flops"] > 0 and decode["bytes"] > 0
+        r = trace_adapters.ChipletRoofline()
+        balance = r.peak_flops_per_cycle / r.peak_hbm_bytes_per_cycle
+        assert prefill["flops"] / prefill["bytes"] > balance
+        assert decode["flops"] / decode["bytes"] < balance
+        assert r.intensity(prefill["flops"], prefill["bytes"]) < 0.5
+        assert r.intensity(decode["flops"], decode["bytes"]) == pytest.approx(
+            1.0)
+
+    def test_step_cost_unknown_kind(self):
+        with pytest.raises(ValueError, match="unknown phase kind"):
+            trace_adapters.step_cost("training")
+
+    def test_serving_trace_runs_through_simulator(self):
+        """The adapter trace is a runnable workload end to end (stretch-fit
+        onto a short run so the test stays cheap)."""
+        costs = {
+            "prefill": {"flops": 4096.0, "bytes": 64.0},
+            "decode": {"flops": 1.0, "bytes": 1024.0},
+        }
+        trace = trace_adapters.demand_from_costs(
+            costs, name="unit_serve").with_fit("stretch")
+        try:
+            register_workload("UNIT_SERVE_WL", trace)
+            cfg = NoCConfig(mode="kf", **FAST)
+            res = sim.simulate(cfg, "UNIT_SERVE_WL")
+        finally:
+            unregister_workload("UNIT_SERVE_WL")
+        ipc = np.asarray(res.gpu_ipc)
+        assert ipc.shape == (N,) and np.all(np.isfinite(ipc))
