@@ -15,6 +15,12 @@ any figure can be driven by replayed/adapted demand instead of its
 builtin synthetic workloads.  The default fit is "stretch": drivers run
 at many ``n_epochs``, and a linear resample keeps any trace usable
 everywhere (pass ``--trace-fit exact`` to insist on bitwise replay).
+
+``--faults NAME`` injects a registered fault scenario (`faults.FAULTS`,
+DESIGN.md §16) into every row a driver sweeps: drivers splat
+`fault_overrides(args)` into their `run(**overrides)` call, and since
+`faults` is an `NoCConfig` field carried as traced data, the faulty grid
+still shares the healthy grid's one compiled program.
 """
 from __future__ import annotations
 
@@ -52,6 +58,10 @@ def build_parser(
         ap.add_argument("--smoke", action="store_true", help=smoke_help)
     if gate_help is not None:
         ap.add_argument("--gate", action="store_true", help=gate_help)
+    ap.add_argument("--faults", metavar="NAME", default=None,
+                    help="inject a registered fault scenario "
+                         "(repro.core.noc.faults.FAULTS, e.g. FLAP_BFS) "
+                         "into every swept row; default: healthy fabric")
     if trace:
         ap.add_argument("--trace", metavar="F.npz", default=None,
                         help="drive the figure with a recorded demand trace "
@@ -64,6 +74,25 @@ def build_parser(
                              "repeats cyclically, stretch resamples "
                              "linearly (default)")
     return ap
+
+
+def fault_overrides(args) -> dict:
+    """Config overrides for ``--faults`` ({} when the flag is absent).
+
+    Drivers splat the result into their `run(**overrides)` call; `sweep`
+    forwards overrides to every row's `NoCConfig`, where an explicit
+    `faults` key takes precedence over any per-spec value.  The name is
+    validated eagerly so a typo fails at the CLI (with the registry's
+    close-match suggestions) instead of deep inside the dispatch.
+    """
+    name = getattr(args, "faults", None)
+    if not name:
+        return {}
+    from repro.core.noc.faults import lookup_faults
+
+    lookup_faults(name)
+    print(f"# --faults: injecting fault scenario {name!r} into every row")
+    return {"faults": name}
 
 
 def registered_trace(args) -> str | None:

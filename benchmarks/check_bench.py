@@ -48,6 +48,12 @@ for pre-ledger history), and the `noc_obs` flight-recorder row, once
 committed, must keep its probe-overhead measurement and one-trace-per-
 probe-setting contract (`check_obs_row`).
 
+The `noc_faults` row (benchmarks/fig_faults.py, DESIGN.md §16) follows
+the same tolerate-then-gate pattern via `check_faults_row`: once
+committed it must keep showing the guarded KF >= unguarded KF and >=
+always_off under every fault scenario, a bitwise-free healthy guard, and
+a single-trace fault x guard grid.
+
     PYTHONPATH=src python -m benchmarks.check_bench [--grid smoke|full]
 
 Exit code 0 = within tolerance, 1 = regression (message says which gate).
@@ -253,6 +259,42 @@ def check_trace_replay_row(records: list) -> list:
     return failures
 
 
+def check_faults_row(records: list) -> list:
+    """Tolerate-then-gate the committed `noc_faults` record.
+
+    Absent record -> tolerated (the fault-injection bench has never been
+    run on this checkout); present record -> it must document the
+    robustness contract (DESIGN.md §16): guarded KF >= unguarded KF and
+    >= always_off under every fault scenario, the healthy guard-on/off
+    pair bitwise-identical, and the fault x guard grid single-trace.
+    """
+    rows = [r for r in records if r.get("bench") == "noc_faults"]
+    if not rows:
+        print("noc_faults: no committed record yet — tolerated "
+              "(run benchmarks.fig_faults non-smoke to add one)")
+        return []
+    row = rows[-1]
+    failures = []
+    if row.get("traces", 1) != 1:
+        failures.append(
+            f"faults regression: committed noc_faults row traced simulate "
+            f"{row.get('traces')}x (contract: 1)"
+        )
+    if row.get("guard_beats_all") is not True:
+        failures.append(
+            "faults regression: committed noc_faults row no longer shows "
+            "guarded KF >= unguarded KF and >= always_off under every "
+            f"fault scenario (margins: {row.get('margins')})"
+        )
+    if row.get("healthy_bitwise") is not True:
+        failures.append(
+            "faults regression: committed noc_faults row's healthy "
+            "guard-on run was not bitwise-equal to guard-off (arming the "
+            "guard must be free on clean telemetry)"
+        )
+    return failures
+
+
 def check(rec: dict, baseline: dict, min_speedup: float, frac: float,
           min_steady: float = DEFAULT_MIN_STEADY,
           steady_frac: float = DEFAULT_STEADY_FRAC,
@@ -332,6 +374,7 @@ def main(argv=None) -> int:
     )
     failures += check_ablation(records)
     failures += check_trace_replay_row(records)
+    failures += check_faults_row(records)
     failures += check_pallas_row(records)
     failures += check_ledger_schema(records)
     failures += check_obs_row(records)

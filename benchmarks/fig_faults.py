@@ -1,0 +1,293 @@
+"""Fault-injection study: the self-healing KF under fabric and telemetry
+faults (DESIGN.md §16).
+
+The paper's controller assumes clean counters and a healthy fabric; this
+driver measures what the repo's KF allocator does when neither holds.
+Every registered fault scenario (`faults.FAULTS`: link flaps, router
+brownouts, telemetry NaN/spike/drop glitches, a flap landing mid
+phase-shift) runs three arms over the ablation's gate scenario:
+
+  * kf_guarded  — the KF with the self-healing layer armed (innovation
+                  gate + divergence watchdog + covariance reset +
+                  fair-split fallback while unhealthy);
+  * kf          — the same KF unguarded (telemetry corruption poisons
+                  the filter state; NaNs persist);
+  * always_off  — the static fair split (config 0), the floor a degraded
+                  controller is allowed to fall to.
+
+Fault masks are traced scan inputs, so the whole healthy x faulty x
+guarded grid shares the simulator's ONE compiled program (`--gate`
+asserts it).  A healthy (faults=None) guard-on vs guard-off pair rides in
+the grid and must be BITWISE equal: with clean telemetry the gate never
+fires, so arming the guard costs nothing.
+
+Gate (robustness ordering): under every fault scenario the guarded KF's
+mean GPU IPC must be >= the unguarded KF's AND >= always_off's, the grid
+single-trace, and the healthy pair bitwise.  Non-smoke runs also capture
+a probed (flight-recorder) guarded run per scenario — innovation
+rejections, covariance resets, fallback epochs — and append a
+`noc_faults` ledger row that `benchmarks/check_bench.py`
+tolerates-until-present and then gates on.
+
+    PYTHONPATH=src python -m benchmarks.fig_faults [--smoke] [--gate]
+                                                   [--faults NAME]
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.fig_ablation import KF_Q_ABLATION
+from repro.core.allocator import PolicyConfig
+from repro.core.noc import sim
+from repro.core.noc.faults import FAULTS
+from repro.core.noc.sim import (
+    NoCConfig,
+    SweepSpec,
+    summarize_seeds,
+    sweep,
+)
+from repro.obs.probes import summarize_trace
+
+# Every registered fault scenario, in registry order.
+FAULT_SET = tuple(FAULTS)
+ARMS = ("kf_guarded", "kf", "always_off")
+# Same scenario + KF tuning as the predictor ablation: the fault study
+# asks "does the guard preserve the ablation's win under faults", so it
+# must run the configuration that produced the win.
+GATE_SCENARIO = "SHIFT_PATH_BFS"
+SEEDS = (0, 1, 2)
+# The healthy control cell's label in the results table.
+HEALTHY = "healthy"
+
+# Smoke trims seeds and the fault set (one physical + one telemetry
+# scenario), not the simulated dims — the fault windows are phased
+# against the gate scenario's full 120-epoch arc structure, so shrinking
+# n_epochs would move the faults off the transients they target.
+SMOKE = dict(seeds=(0,), fault_set=("FLAP_BFS", "TELEM_GLITCH"))
+
+
+def _arm_spec(arm: str, faults: str | None, seed: int) -> SweepSpec:
+    return SweepSpec(
+        "kf", GATE_SCENARIO, seed=seed,
+        predictor="always_off" if arm == "always_off" else "kf",
+        faults=faults, guard=arm == "kf_guarded",
+    )
+
+
+def _bitwise_equal(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y), equal_nan=True)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def run(
+    n_epochs: int = 120,
+    seeds: tuple[int, ...] = SEEDS,
+    fault_set: tuple[str, ...] = FAULT_SET,
+    devices: int | None = None,
+    probe: bool = True,
+    **overrides,
+) -> dict:
+    """Sweep (healthy + fault scenarios) x arms x seeds; summarize + probe.
+
+    Returns the per-cell summary table, the healthy guard-on/guard-off
+    bitwise verdict, the sweep's trace count (captured BEFORE the probed
+    runs — probes-on is deliberately its own compiled program), and one
+    probed guarded run's self-healing counters per fault scenario.
+    """
+    overrides.setdefault("kf_q", KF_Q_ABLATION)
+    cells: list[str | None] = [None] + list(fault_set)
+    points = [(flt, arm, s) for flt in cells for arm in ARMS for s in seeds]
+    specs = [_arm_spec(arm, flt, s) for flt, arm, s in points]
+    sim.reset_trace_count()
+    rows = sweep(specs, n_epochs=n_epochs, devices=devices, **overrides)
+    traces = sim.trace_count()
+
+    by_cell: dict[tuple[str | None, str], list] = {}
+    for (flt, arm, _), row in zip(points, rows):
+        by_cell.setdefault((flt, arm), []).append(row)
+
+    policy = overrides.get("policy", PolicyConfig())
+    epoch_len = overrides.get("epoch_len", 500)
+    warmup_epochs = min(math.ceil(policy.warmup / epoch_len), n_epochs - 1)
+    table = {
+        (flt or HEALTHY): {
+            arm: summarize_seeds(by_cell[(flt, arm)],
+                                 warmup_epochs=warmup_epochs)
+            for arm in ARMS
+        }
+        for flt in cells
+    }
+
+    # Healthy control: arming the guard on a clean fabric must be free —
+    # bitwise, per seed, across the full SimResult.
+    healthy_bitwise = all(
+        _bitwise_equal(a, b)
+        for a, b in zip(by_cell[(None, "kf_guarded")], by_cell[(None, "kf")])
+    )
+
+    probes = {}
+    if probe:
+        for flt in fault_set:
+            cfg = NoCConfig(
+                mode="kf", n_epochs=n_epochs, seed=seeds[0],
+                predictor="kf", faults=flt, guard=True, **overrides,
+            )
+            _, trace = sim.simulate_with_trace(cfg, GATE_SCENARIO)
+            s = summarize_trace(trace)
+            probes[flt] = {
+                k: s[k]
+                for k in ("kf_rejected_total", "kf_reset_total",
+                          "fallback_epochs", "fault_epochs")
+            }
+
+    return {
+        "table": table,
+        "traces": traces,
+        "healthy_bitwise": healthy_bitwise,
+        "probes": probes,
+        "warmup_epochs": warmup_epochs,
+    }
+
+
+def guard_verdict(table: dict, fault_set: tuple[str, ...]) -> dict:
+    """Per-scenario guarded-vs-{unguarded, always_off} GPU-IPC margins.
+
+    Margins compare UNROUNDED values (rounding only the report): the gate
+    must catch a sub-quantum ordering violation.
+    """
+    margins = {}
+    for flt in fault_set:
+        cells = table[flt]
+        g = cells["kf_guarded"]["gpu_ipc"]
+        margins[flt] = {
+            "vs_kf": round(g - cells["kf"]["gpu_ipc"], 6),
+            "vs_always_off": round(g - cells["always_off"]["gpu_ipc"], 6),
+        }
+    beats = all(
+        table[flt]["kf_guarded"]["gpu_ipc"] >= table[flt][arm]["gpu_ipc"]
+        for flt in fault_set for arm in ("kf", "always_off")
+    )
+    return {"margins": margins, "guard_beats_all": beats}
+
+
+def record(res: dict, grid: dict, verdict: dict) -> dict:
+    return {
+        "bench": "noc_faults",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "scenario": GATE_SCENARIO,
+        "grid": grid,
+        "traces": res["traces"],
+        "healthy_bitwise": res["healthy_bitwise"],
+        "gpu_ipc": {
+            flt: {arm: round(cells[arm]["gpu_ipc"], 6) for arm in ARMS}
+            for flt, cells in res["table"].items()
+        },
+        "probes": res["probes"],
+        **verdict,
+    }
+
+
+def main(argv=None):
+    from benchmarks import _cli
+
+    ap = _cli.build_parser(
+        __doc__,
+        smoke_help="one seed on one physical + one telemetry fault "
+                   "scenario at full simulated dims (see SMOKE); no "
+                   "BENCH_noc.json append",
+        gate_help="exit 1 unless the guarded KF >= unguarded KF and >= "
+                  "always_off under every fault scenario, the healthy "
+                  "guard-on/off pair is bitwise, and the grid ran "
+                  "single-trace",
+        trace=False,
+    )
+    args = ap.parse_args(argv)
+    from repro.obs import profiling
+
+    n_epochs, overrides = 120, {"backend": args.backend}
+    if args.smoke:
+        seeds, fault_set = SMOKE["seeds"], SMOKE["fault_set"]
+    else:
+        seeds, fault_set = SEEDS, FAULT_SET
+    if args.faults:
+        # here the shared flag narrows the study to one scenario rather
+        # than injecting it into every row (each row already carries its
+        # own fault source)
+        from repro.core.noc.faults import lookup_faults
+
+        lookup_faults(args.faults)
+        fault_set = (args.faults,)
+
+    res = profiling.profiled_run(
+        args.profile,
+        lambda: run(n_epochs=n_epochs, seeds=seeds, fault_set=fault_set,
+                    devices=args.devices, **overrides),
+        label="fig_faults",
+    )
+    print("faults,arm,gpu_ipc,gpu_ipc_std,cpu_ipc,avg_latency,boost_frac")
+    for flt, cells in res["table"].items():
+        for arm, s in cells.items():
+            print(f"{flt},{arm},{s['gpu_ipc']:.4f},{s['gpu_ipc_std']:.4f},"
+                  f"{s['cpu_ipc']:.4f},{s['avg_latency']:.2f},"
+                  f"{s['kf_on_frac']:.2f}")
+
+    verdict = guard_verdict(res["table"], fault_set)
+    print(f"# traces: {res['traces']} (contract: 1)")
+    print(f"# healthy guard-on == guard-off bitwise: "
+          f"{res['healthy_bitwise']}")
+    for flt, m in verdict["margins"].items():
+        p = res["probes"].get(flt, {})
+        note = (f" [rejected {p['kf_rejected_total']}, resets "
+                f"{p['kf_reset_total']}, fallback {p['fallback_epochs']} "
+                f"of {p['fault_epochs']} fault epochs]" if p else "")
+        print(f"# {flt}: guarded margin vs kf {m['vs_kf']:+.4f}, "
+              f"vs always_off {m['vs_always_off']:+.4f}{note}")
+    print(f"# guard_beats_all: {verdict['guard_beats_all']} "
+          "(guarded KF >= unguarded KF and >= fair static split under "
+          "every fault)")
+
+    if not args.smoke:
+        from benchmarks.bench_sweep import BENCH_PATH, append_record
+
+        grid = {"fault_set": list(fault_set), "arms": list(ARMS),
+                "seeds": list(seeds), "n_epochs": n_epochs,
+                "kf_q": KF_Q_ABLATION}
+        rec = record(res, grid, verdict)
+        append_record(rec)
+        print(json.dumps(rec, indent=2))
+        print(f"appended noc_faults record to {BENCH_PATH}")
+
+    if args.gate:
+        failures = []
+        if res["traces"] != 1:
+            failures.append(f"fault grid traced simulate {res['traces']}x "
+                            "(contract: the one shared program)")
+        if not res["healthy_bitwise"]:
+            failures.append("healthy guard-on run is not bitwise-equal to "
+                            "guard-off (arming the guard must be free on "
+                            "clean telemetry)")
+        if not verdict["guard_beats_all"]:
+            losing = {
+                flt: m for flt, m in verdict["margins"].items()
+                if min(m.values()) < 0
+            }
+            failures.append(f"guarded KF lost the robustness ordering on "
+                            f"{losing}")
+        for f in failures:
+            print(f"FAULTS GATE: {f}", file=sys.stderr)
+        if failures:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

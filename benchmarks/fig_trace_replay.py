@@ -179,7 +179,8 @@ def main(argv=None):
         args.profile,
         lambda: ablation_run(n_epochs=120, seeds=seeds,
                              scenarios=(source,), devices=args.devices,
-                             backend=args.backend),
+                             backend=args.backend,
+                             **_cli.fault_overrides(args)),
         label="fig_trace_replay",
     )
     print("source,predictor,gpu_ipc,gpu_ipc_std,cpu_ipc,avg_latency,"

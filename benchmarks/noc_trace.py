@@ -39,10 +39,11 @@ META_KEYS = ("workload", "mode", "n_epochs", "epoch_len", "seed", "backend")
 
 def capture(workload: str = "SHIFT_PATH_BFS", mode: str = "kf",
             n_epochs: int = 24, epoch_len: int = 200, seed: int = 0,
-            backend: str = "ref") -> dict:
+            backend: str = "ref", faults: str | None = None,
+            guard: bool = False) -> dict:
     """Probes-on run -> flat dict of numpy arrays + run metadata."""
     cfg = sim.NoCConfig(mode=mode, n_epochs=n_epochs, epoch_len=epoch_len,
-                        seed=seed)
+                        seed=seed, faults=faults, guard=guard)
     res, trace = sim.simulate_with_trace(cfg, workload, backend=backend)
     cap = {f: np.asarray(v) for f, v in zip(sim.SimTrace._fields, trace)}
     cap["kf_signal"] = np.asarray(res.kf_signal)
@@ -82,12 +83,14 @@ def render_ascii(cap: dict) -> list:
     frac = _occ_frac(cap)
     depth_est = max(float(frac.max()), 1e-9)
     E, S = frac.shape
+    has_faults = "faults_active" in cap  # pre-§16 captures lack the channels
     lines = [
         f"# workload={cap['workload']} mode={cap['mode']} "
         f"epochs={cap['n_epochs']} epoch_len={cap['epoch_len']} "
         f"seed={cap['seed']} backend={cap['backend']}",
         "#  ep |occ/subnet| grant  deny mcqMax | z(dram,push,icnt) "
-        "innov0   gain0  x_pred sig cfg",
+        "innov0   gain0  x_pred sig cfg"
+        + (" | flt rej rst ok     nis" if has_faults else ""),
     ]
     for e in range(E):
         heat = "".join(
@@ -96,6 +99,16 @@ def render_ascii(cap: dict) -> list:
             for s in range(S)
         )
         z = cap["z_obs"][e]
+        fault_cols = ""
+        if has_faults:
+            # the fault -> reject -> reset -> recover story, one glyph each
+            fault_cols = (
+                f" | {'F' if cap['faults_active'][e] else '.':>3s}"
+                f" {'R' if cap['kf_rejected'][e] else '.':>3s}"
+                f" {'*' if cap['kf_reset'][e] else '.':>3s}"
+                f" {'y' if cap['kf_healthy'][e] else 'n':>2s}"
+                f" {float(cap['kf_nis'][e]):7.2f}"
+            )
         lines.append(
             f"{e:5d} |{heat:^10s}| {int(cap['arb_grant'][e].sum()):6d}"
             f" {int(cap['arb_deny'][e].sum()):5d}"
@@ -106,12 +119,14 @@ def render_ascii(cap: dict) -> list:
             f" {cap['kf_x_pred'][e]:+.3f}"
             f" {int(cap['kf_signal'][e]):3d}"
             f" {int(cap['applied_config'][e]):3d}"
+            + fault_cols
         )
     return lines
 
 
 def render_csv(cap: dict) -> list:
     """Machine-readable per-epoch rows (same quantities as the ASCII view)."""
+    has_faults = "faults_active" in cap  # pre-§16 captures lack the channels
     cols = (
         ["epoch", "occ_sum", "arb_grant", "arb_deny", "mcq_sum", "mcq_max"]
         + [f"z_{i}" for i in range(3)]
@@ -119,6 +134,8 @@ def render_csv(cap: dict) -> list:
         + [f"gain_{i}" for i in range(3)]
         + ["cov_trace", "x_pred", "kf_signal", "applied_config",
            "gpu_ipc", "avg_latency"]
+        + (["faults_active", "kf_nis", "kf_rejected", "kf_reset",
+            "kf_healthy"] if has_faults else [])
     )
     lines = [",".join(cols)]
     for e in range(int(cap["n_epochs"])):
@@ -132,6 +149,9 @@ def render_csv(cap: dict) -> list:
             + [float(cap["kf_cov_trace"][e]), float(cap["kf_x_pred"][e]),
                int(cap["kf_signal"][e]), int(cap["applied_config"][e]),
                float(cap["gpu_ipc"][e]), float(cap["avg_latency"][e])]
+            + ([int(cap["faults_active"][e]), float(cap["kf_nis"][e]),
+                int(cap["kf_rejected"][e]), int(cap["kf_reset"][e]),
+                int(cap["kf_healthy"][e])] if has_faults else [])
         )
         lines.append(",".join(str(v) for v in row))
     return lines
@@ -234,6 +254,12 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="ref",
                     choices=("ref", "pallas", "pallas_arb"),
                     help="cycle engine; all bitwise-identical, incl. probes")
+    ap.add_argument("--faults", metavar="NAME", default=None,
+                    help="inject a registered fault scenario (DESIGN.md §16)"
+                         " and render the fault/reject/reset/recover columns")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the self-healing KF guard (innovation gate +"
+                         " watchdog + fair-split fallback)")
     ap.add_argument("--csv", action="store_true",
                     help="emit CSV rows instead of the ASCII timeline")
     ap.add_argument("--save", metavar="F.npz", help="save the capture")
@@ -256,7 +282,8 @@ def main(argv=None) -> int:
     else:
         cap = capture(workload=args.workload, mode=args.mode,
                       n_epochs=args.epochs, epoch_len=args.epoch_len,
-                      seed=args.seed, backend=args.backend)
+                      seed=args.seed, backend=args.backend,
+                      faults=args.faults, guard=args.guard)
     if args.save:
         save(cap, args.save)
     lines = render_csv(cap) if args.csv else render_ascii(cap)

@@ -139,6 +139,7 @@ def mode_policy(
     active_vcs: int | None = None,
     predictor: str = "kf",
     ema_alpha: float = 0.5,
+    guard: bool = False,
 ) -> ModePolicy:
     """Build the traced policy tensors for one of the paper's modes.
 
@@ -158,7 +159,9 @@ def mode_policy(
 
     ``predictor``/``ema_alpha`` pick the bank member that emits the
     reconfiguration signal (repro.core.predictor; meaningful only when the
-    hysteresis machine is enabled, i.e. mode="kf").
+    hysteresis machine is enabled, i.e. mode="kf").  ``guard`` arms that
+    member's self-healing layer (innovation gate, divergence watchdog,
+    covariance reset — DESIGN.md §16); disarmed it is bitwise inert.
     """
     if n_subnets is None:
         n_subnets = 4 if mode == "4subnet" else 2
@@ -209,7 +212,8 @@ def mode_policy(
         four_subnet=jnp.asarray(mode == "4subnet"),
         sub_enabled=sub_enabled,
         sub_is_req=sub_is_req,
-        predictor=predictor_policy(predictor, ema_alpha=ema_alpha),
+        predictor=predictor_policy(predictor, ema_alpha=ema_alpha,
+                                   guard=guard),
     )
 
 
@@ -232,6 +236,31 @@ def apply_policy_gated(
     new = apply_policy(cfg, state, kf_signal, cycle)
     return jax.tree.map(
         lambda n, o: jnp.where(policy.kf_enable, n, o), new, state
+    )
+
+
+def degrade_policy(state: PolicyState, healthy: Array) -> PolicyState:
+    """Traced degraded-mode fallback (DESIGN.md §16).
+
+    While the predictor watchdog reports unhealthy, the applied
+    configuration reverts to the fair static split (config 0) and the
+    boost timer is cleared, so a poisoned filter can never starve a
+    chiplet class worse than the no-predictor baseline.  `last_change`
+    is kept, not reset: on recovery the hysteresis hold window is
+    whatever it already was, so a healthy signal can re-boost
+    immediately instead of serving a fresh hold penalty.
+
+    `healthy` is a () bool (from `PredictorState.healthy`); it is
+    constant True whenever the guard is disarmed, making this an
+    elementwise identity on every pre-guard program.
+    """
+    fallback = PolicyState(
+        config=jnp.int32(0),
+        last_change=state.last_change,
+        boosted_since=jnp.int32(-1),
+    )
+    return jax.tree.map(
+        lambda f, o: jnp.where(healthy, o, f), fallback, state
     )
 
 

@@ -102,6 +102,23 @@ def measurement_update(params: KalmanParams, prior: KalmanState, z: Array):
     p_post = (jnp.eye(n, dtype=p_prior.dtype) - k @ h) @ p_prior
     # symmetrize to fight drift in long scans
     p_post = 0.5 * (p_post + p_post.T)
+    # numerical-breakdown coast (DESIGN.md §16): at pathological
+    # conditioning (e.g. R ~ 1e-12 against P ~ 1 makes cond(S) ~ 1e12,
+    # past fp32's solve) the update can emit a non-finite or
+    # negative-variance posterior that poisons every later step.  Coast
+    # on the prior instead of propagating the breakdown.  Only a FINITE
+    # observation triggers the coast: a corrupted (NaN) z must still
+    # poison an unguarded filter — rejecting bad telemetry is the
+    # innovation gate's job (predictor.step_probed), not this layer's.
+    # Any well-conditioned update leaves `broke` False and the `where`
+    # selects the computed posterior bit-for-bit, so healthy programs
+    # are unchanged.
+    broke = ~(jnp.all(jnp.isfinite(x_post))
+              & jnp.all(jnp.isfinite(p_post))
+              & jnp.all(jnp.diagonal(p_post) > 0.0))
+    coast = broke & jnp.all(jnp.isfinite(z))
+    x_post = jnp.where(coast, x_prior, x_post)
+    p_post = jnp.where(coast, p_prior, p_post)
     return KalmanState(x=x_post, p=p_post), innovation
 
 
@@ -118,6 +135,26 @@ def kalman_gain(params: KalmanParams, prior: KalmanState) -> Array:
     p_prior = prior.p
     s = h @ p_prior @ h.T + params.r
     return jnp.linalg.solve(s, h @ p_prior.T).T
+
+
+def innovation_nis(params: KalmanParams, prior: KalmanState, z: Array) -> Array:
+    """Normalized innovation squared: nu^T S^-1 nu, a () scalar.
+
+    The chi-square-distributed consistency statistic the self-healing
+    gate thresholds (DESIGN.md §16): under a healthy filter NIS ~
+    chi2(m), so a corrupted observation (spike, floor-drop) shows up as
+    a value tens of sigma above the m=3 expectation.  Like
+    `kalman_gain`, this recomputes S and the innovation with the SAME
+    expressions in the same order as `measurement_update` so XLA CSEs
+    the work inside a traced program.  NaN observations yield NaN NIS;
+    `NaN > threshold` is False, which is why the gate in
+    `predictor.step_probed` carries an explicit finiteness term.
+    """
+    h = params.h
+    p_prior = prior.p
+    s = h @ p_prior @ h.T + params.r
+    nu = z - h @ prior.x
+    return nu @ jnp.linalg.solve(s, nu)
 
 
 def step(

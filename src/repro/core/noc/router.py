@@ -195,7 +195,18 @@ def router_cycle(
     mc_can_accept: Array,   # (S, R) bool — ejection credit at local sink
     active: Array,          # (S,) bool — link active this cycle
     arbitrate_fn: Callable[..., Arbitration] = arbitrate,
+    link_ok: Array | None = None,    # (R, P) bool — fault mask: port usable
+    router_ok: Array | None = None,  # (R,) bool — fault mask: router granting
 ) -> tuple[SubnetState, CycleEvents]:
+    """Advance every router of every subnet by one cycle.
+
+    Fault masks (DESIGN.md §16) only ever AND into existing gates: a
+    False ``link_ok[r, p]`` makes port p of router r look like a
+    non-existent link (its head packets are never granted and
+    back-pressure in place), a False ``router_ok[r]`` suppresses every
+    grant at router r including local ejection (a brownout).  ``None``
+    (or all-True) masks leave the program's values bit-for-bit unchanged.
+    """
     S, R, P, V, B = state.buf_meta.shape
     ar = jnp.arange(R)
 
@@ -213,7 +224,13 @@ def router_cycle(
     nb_safe = jnp.maximum(topo_neighbor, 0)                       # (R, O)
     opp_b = jnp.broadcast_to(topo_opposite[None, :], (R, N_PORTS))
     down_count = state.count[:, nb_safe, opp_b, :].astype(jnp.int32)
-    down_exists = jnp.broadcast_to(topo_neighbor >= 0, (S, R, N_PORTS))
+    usable = topo_neighbor >= 0
+    if link_ok is not None:
+        usable = usable & link_ok
+    down_exists = jnp.broadcast_to(usable, (S, R, N_PORTS))
+    granting = jnp.broadcast_to(active[:, None], (S, R))
+    if router_ok is not None:
+        granting = granting & router_ok[None, :]
 
     arb = arbitrate_fn(
         valid.reshape(S, R, P * V),
@@ -226,7 +243,7 @@ def router_cycle(
         cpu_vc_mask[:, None, :],
         jnp.broadcast_to(sa_pref_class, (S, R)),
         mc_can_accept,
-        jnp.broadcast_to(active[:, None], (S, R)),
+        granting,
         depth=B,
     )
 

@@ -71,8 +71,17 @@ from repro.core.allocator import (
     init_policy_state,
     mode_policy,
 )
+from repro.core.allocator import degrade_policy
 from repro.core.noc import metrics
 from repro.core.noc import router as rt
+from repro.core.noc.faults import (
+    TELEM_DROP,
+    TELEM_NAN,
+    TELEM_SPIKE,
+    FaultSourceLike,
+    FaultStream,
+    resolve_faults,
+)
 from repro.core.noc.topology import make_topology
 from repro.obs.probes import ProbeConfig, SimTrace
 from repro.core.noc.traffic import (
@@ -168,6 +177,14 @@ class NoCConfig:
     # predictor's smoothing factor.  Traced data — not part of SimStatic.
     predictor: str = "kf"
     ema_alpha: float = 0.5   # the textbook naive-EMA default
+    # robustness knobs (DESIGN.md §16) — both traced data, NOT SimStatic:
+    # `guard` arms the predictor's self-healing layer (innovation gate +
+    # divergence watchdog + covariance reset + fair-split fallback);
+    # `faults` is any `faults.FaultSourceLike` (scenario name,
+    # FaultSchedule, FaultStream, or None = healthy) injected through the
+    # epoch scan's xs — faulty and healthy runs share one compiled program.
+    guard: bool = False
+    faults: FaultSourceLike = None
     # flight recorder (repro.obs, DESIGN.md §14) — static, default off
     probe: ProbeConfig = ProbeConfig()
 
@@ -212,6 +229,7 @@ class NoCConfig:
             self.mode, stc.n_vcs, self.static_gpu_vcs,
             n_subnets=stc.n_subnets, active_vcs=self.vcs_per_subnet,
             predictor=self.predictor, ema_alpha=self.ema_alpha,
+            guard=self.guard,
         )
 
 
@@ -365,13 +383,21 @@ def _simulate_impl(
     profile: WorkloadProfile,
     seed: Array,
     state0,
+    faults: FaultStream,
 ) -> SimResult:
     """Core jitted simulation.  ``profile`` arrives MATERIALIZED: every leaf
     is an (n_epochs,) float32 row (``traffic.materialize``), consumed by the
     epoch scan as `xs` — one parameter row per epoch.  Stationary workloads
     broadcast their scalars across the epoch axis, so scenario schedules
     (piecewise switches, ramps, pinned burst phases — DESIGN.md §12) share
-    this one trace with them by construction."""
+    this one trace with them by construction.
+
+    ``faults`` arrives the same way (DESIGN.md §16): per-epoch mask rows
+    (`faults.resolve_faults`) rode through the epoch scan's xs, always
+    threaded — a healthy run carries the identity stream, so faulty and
+    healthy configurations share this ONE trace and the healthy values are
+    bit-for-bit the pre-fault program's (every fault gate is an AND or a
+    mode-0 `where`)."""
     _trace_counter[0] += 1  # Python side effect: runs only at trace time
 
     topo = make_topology()
@@ -459,7 +485,9 @@ def _simulate_impl(
         )
 
     def epoch_body(carry, epoch_xs):
-        epoch_key, prof = epoch_xs  # prof: this epoch's scalar-leaf profile
+        # prof: this epoch's scalar-leaf profile; flt: this epoch's fault
+        # masks — link_ok (R, P), router_ok (R,), mc_ok (R,), telem ()s
+        epoch_key, prof, flt = epoch_xs
         subs, mc, phase, outst, backlog, policy, pred_state, cycle0 = carry
 
         # ---- epoch-invariant hoisting (DESIGN.md §11): `policy.config` is
@@ -527,7 +555,9 @@ def _simulate_impl(
             )
 
             # ---- 1. MC service: tick timers, move head request -> staging
-            can_serve = is_mc & (mc.count > 0) & ~mc.stage_valid
+            # (a stalled MC — flt.mc_ok False — freezes its timer and
+            # staging; the queue keeps filling until it back-pressures)
+            can_serve = is_mc & (mc.count > 0) & ~mc.stage_valid & flt.mc_ok
             timer = jnp.where(
                 can_serve, jnp.maximum(mc.timer - 1, 0), mc.timer
             )
@@ -551,11 +581,14 @@ def _simulate_impl(
                 stage_cls=jnp.where(done, cls_out, mc.stage_cls),
             )
 
-            # ---- 2. route/arbitrate every subnet
+            # ---- 2. route/arbitrate every subnet (per-epoch fault masks:
+            # a dead link back-pressures, a browned-out router grants
+            # nothing — DESIGN.md §16)
             subs, events = rt.router_cycle(
                 subs, route_t, nb_t, opp_t,
                 gpu_masks, cpu_masks, sa_pref, accept_s, active,
                 arbitrate_fn=arb_fn,
+                link_ok=flt.link_ok, router_ok=flt.router_ok,
             )
 
             # ---- 3. ejection handling
@@ -698,13 +731,24 @@ def _simulate_impl(
             xi, xf = lanes.cycle_xs(
                 lane_dims, cycles, u_phase, u_gen, dests_all, sa_all,
                 active_all, rep_gate,
+                router_ok=flt.router_ok, mc_ok=flt.mc_ok,
             )
+            # epoch link-fault mask folded into the link-exists rows: the
+            # lane kernel sees a dead link exactly as a non-existent one
+            link_rows = jnp.tile(
+                jnp.pad(
+                    flt.link_ok.astype(jnp.int32).T,
+                    ((0, 0), (0, lanes.R_PAD - R)),
+                ),
+                (1, S),
+            )
+            exists_ep = exists_rows * link_rows
             ls0 = lanes.pack_state(lane_dims, subs, mc, outst, backlog, phase)
 
             def fused_cycle(ls, x):
                 ls = lane_ops.fused_cycle_step(
                     lane_dims, ls, x[0], x[1], gm_rows, cm_rows, pr_rows,
-                    pol_sr, pol_r, ntype_row, route_rows, exists_rows,
+                    pol_sr, pol_r, ntype_row, route_rows, exists_ep,
                 )
                 return ls, None
 
@@ -712,7 +756,7 @@ def _simulate_impl(
                 ls, pb = carry
                 ls, pb = lane_ops.fused_cycle_step(
                     lane_dims, ls, x[0], x[1], gm_rows, cm_rows, pr_rows,
-                    pol_sr, pol_r, ntype_row, route_rows, exists_rows,
+                    pol_sr, pol_r, ntype_row, route_rows, exists_ep,
                     probe=pb,
                 )
                 return (ls, pb), None
@@ -755,6 +799,15 @@ def _simulate_impl(
             ]
         )
         z = kalman.normalize_observations(raw, jnp.zeros(3), z_scales)
+        # telemetry corruption (DESIGN.md §16): applied AFTER normalization
+        # so a spike escapes the [-1, 1] clip the way a corrupted counter
+        # bus escapes the sensor's calibrated range.  Mode 0 selects the
+        # clean vector through every `where`, so a healthy epoch's z is
+        # bit-for-bit the pre-fault program's.
+        tm = flt.telem_mode
+        z = jnp.where(tm == TELEM_DROP, jnp.full_like(z, -1.0), z)
+        z = jnp.where(tm == TELEM_SPIKE, z + flt.telem_mag, z)
+        z = jnp.where(tm == TELEM_NAN, jnp.full_like(z, jnp.nan), z)
         # predictor bank (DESIGN.md §12): every member advances, the traced
         # `mp.predictor.kind` selects which signal drives the hysteresis
         # machine — the KF lane reproduces the legacy
@@ -768,6 +821,11 @@ def _simulate_impl(
                 mp.predictor, kf_params, pred_state, z
             )
         policy = apply_policy_gated(stc.policy, mp, policy, signal, cycle)
+        # degraded-mode fallback (DESIGN.md §16): while the predictor
+        # watchdog reports unhealthy, the applied configuration reverts to
+        # the fair static split; `healthy` is constant True whenever the
+        # guard is disarmed, so this is an identity on pre-guard programs.
+        policy = degrade_policy(policy, pred_state.healthy)
 
         # ---- IPC proxies (documented in metrics.py)
         gpu_ipc = metrics.gpu_ipc_proxy(
@@ -782,7 +840,15 @@ def _simulate_impl(
         out = (gpu_ipc, cpu_ipc, avg_lat, signal, policy.config, cnt, inj_rate,
                jnp.sum(g_vec.astype(jnp.int32)))
         if probe_on:
-            out = (out, (prb, kfi, z))
+            # fault-event channel: how many fabric elements this epoch's
+            # masks suppressed, plus whether telemetry was corrupted
+            faults_active = (
+                jnp.sum((~flt.link_ok).astype(jnp.int32))
+                + jnp.sum((~flt.router_ok).astype(jnp.int32))
+                + jnp.sum((~flt.mc_ok).astype(jnp.int32))
+                + (tm != 0).astype(jnp.int32)
+            )
+            out = (out, (prb, kfi, z, faults_active))
         return (subs, mc, phase, outst, backlog, policy, pred_state, cycle), out
 
     key0 = jax.random.PRNGKey(seed)
@@ -797,9 +863,9 @@ def _simulate_impl(
         predictor.init_state(),
         jnp.int32(0),
     )
-    _, outs = jax.lax.scan(epoch_body, carry0, (epoch_keys, profile))
+    _, outs = jax.lax.scan(epoch_body, carry0, (epoch_keys, profile, faults))
     if probe_on:
-        outs, (prb, kfi, z_obs) = outs
+        outs, (prb, kfi, z_obs, faults_active) = outs
     gpu_ipc, cpu_ipc, avg_lat, sig, conf, cnt, inj, quota = outs
     result = SimResult(
         gpu_ipc=gpu_ipc,
@@ -824,6 +890,11 @@ def _simulate_impl(
         kf_cov_trace=kfi.cov_trace,
         kf_x_pred=kfi.x_pred,
         z_obs=z_obs,
+        kf_nis=kfi.nis,
+        kf_rejected=kfi.rejected,
+        kf_reset=kfi.reset,
+        kf_healthy=kfi.healthy,
+        faults_active=faults_active,
     )
     return result, trace
 
@@ -846,11 +917,23 @@ def _batch_jit():
     if _BATCH_JIT is None:
         donate = () if jax.default_backend() == "cpu" else (4,)
         _BATCH_JIT = jax.jit(
-            jax.vmap(_simulate_impl, in_axes=(None, 0, 0, 0, 0)),
+            jax.vmap(_simulate_impl, in_axes=(None, 0, 0, 0, 0, 0)),
             static_argnums=0,
             donate_argnums=donate,
         )
     return _BATCH_JIT
+
+
+def _run_faults(source: FaultSourceLike, stc: SimStatic) -> FaultStream:
+    """Lower a config's fault source against the run topology.
+
+    The neighbor table makes link faults symmetric (a dead link is dead
+    both ways — `faults.FaultSchedule.materialize`)."""
+    topo = make_topology()
+    return resolve_faults(
+        source, stc.n_epochs, n_routers=topo.n_routers,
+        neighbor=topo.neighbor, opposite=topo.opposite,
+    )
 
 
 def simulate(
@@ -885,6 +968,7 @@ def simulate(
         resolve_source(source, stc.n_epochs),
         jnp.int32(cfg.seed),
         init_sim_state(stc),
+        _run_faults(cfg.faults, stc),
     )
 
 
@@ -943,10 +1027,10 @@ def _sharded_jit(stc: SimStatic, mesh):
 
         from repro.dist import sharding as dist_sharding
 
-        batched = jax.vmap(_simulate_impl, in_axes=(None, 0, 0, 0, 0))
+        batched = jax.vmap(_simulate_impl, in_axes=(None, 0, 0, 0, 0, 0))
 
-        def shard_body(mp, prof, seeds, state0):
-            return batched(stc, mp, prof, seeds, state0)
+        def shard_body(mp, prof, seeds, state0, flt):
+            return batched(stc, mp, prof, seeds, state0, flt)
 
         spec = P(SWEEP_AXIS)
         # check_vma off: jax 0.4.37's replication checker mis-types the
@@ -958,7 +1042,7 @@ def _sharded_jit(stc: SimStatic, mesh):
         _SHARD_JIT[key] = jax.jit(
             dist_sharding.shard_map(
                 shard_body, mesh=mesh,
-                in_specs=(spec, spec, spec, spec), out_specs=spec,
+                in_specs=(spec, spec, spec, spec, spec), out_specs=spec,
                 axis_names=(SWEEP_AXIS,), check_vma=False,
             ),
             donate_argnums=donate,
@@ -1025,6 +1109,9 @@ def simulate_batch(
 
     mp = jax.tree.map(lambda *xs: jnp.stack(xs), *[c.mode_policy() for c in cfgs])
     prof = stack_profiles(profiles)
+    flt = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[_run_faults(c.faults, stc) for c in cfgs]
+    )
 
     if devices is not None or mesh is not None:
         if mesh is None:
@@ -1033,11 +1120,11 @@ def simulate_batch(
             mesh = dist_sharding.sweep_mesh(devices)
         ndev = int(mesh.devices.size)
         padded_b = -(-B // ndev) * ndev
-        mp, prof, seeds = (
-            _pad_rows(t, padded_b - B) for t in (mp, prof, seeds)
+        mp, prof, seeds, flt = (
+            _pad_rows(t, padded_b - B) for t in (mp, prof, seeds, flt)
         )
         out = _sharded_jit(stc, mesh)(
-            mp, prof, seeds, init_sim_state(stc, padded_b)
+            mp, prof, seeds, init_sim_state(stc, padded_b), flt
         )
         return _tree_rows(out, slice(0, B))
 
@@ -1046,12 +1133,16 @@ def simulate_batch(
     for lo in range(0, B, tile):
         sl = slice(lo, min(lo + tile, B))
         n = sl.stop - sl.start
-        mp_t, prof_t, seeds_t = (_tree_rows(t, sl) for t in (mp, prof, seeds))
+        mp_t, prof_t, seeds_t, flt_t = (
+            _tree_rows(t, sl) for t in (mp, prof, seeds, flt)
+        )
         if n < tile:  # pad the ragged tail by repeating row 0 (discarded)
-            mp_t, prof_t, seeds_t = (
-                _pad_rows(t, tile - n) for t in (mp_t, prof_t, seeds_t)
+            mp_t, prof_t, seeds_t, flt_t = (
+                _pad_rows(t, tile - n) for t in (mp_t, prof_t, seeds_t, flt_t)
             )
-        out = _batch_jit()(stc, mp_t, prof_t, seeds_t, init_sim_state(stc, tile))
+        out = _batch_jit()(
+            stc, mp_t, prof_t, seeds_t, init_sim_state(stc, tile), flt_t
+        )
         parts.append(_tree_rows(out, slice(0, n)))
     if len(parts) == 1:
         return parts[0]
@@ -1067,13 +1158,22 @@ class SweepSpec(NamedTuple):
     added via `traffic.register_workload` / `traffic.register_trace`
     (DESIGN.md §15); ``predictor`` picks the bank member driving the
     hysteresis machine (meaningful for mode="kf" — the predictor-ablation
-    axis, DESIGN.md §12)."""
+    axis, DESIGN.md §12).
+
+    ``faults`` names a registered fault scenario (`faults.FAULTS`, None =
+    healthy) and ``guard`` arms the predictor's self-healing layer
+    (DESIGN.md §16) — both traced data, so the whole fault x guard grid
+    rides the same compiled program and batches into one dispatch.  A
+    ``faults``/``guard`` key in `sweep`'s overrides (e.g. the shared
+    `--faults` CLI flag) takes precedence over the per-spec value."""
 
     mode: str
     workload: str
     static_gpu_vcs: int = 2
     seed: int = 0
     predictor: str = "kf"
+    faults: str | None = None
+    guard: bool = False
 
 
 # Tile size for sweep batches.  The paper sweeps (4 workloads x 3 ratios,
@@ -1108,9 +1208,12 @@ def sweep(
     groups: dict[SimStatic, list[int]] = defaultdict(list)
     cfgs = []
     for i, sp in enumerate(specs):
+        kw = dict(overrides)
+        kw.setdefault("faults", sp.faults)
+        kw.setdefault("guard", sp.guard)
         cfg = NoCConfig(
             mode=sp.mode, static_gpu_vcs=sp.static_gpu_vcs, seed=sp.seed,
-            predictor=sp.predictor, **overrides,
+            predictor=sp.predictor, **kw,
         )
         cfgs.append(cfg)
         groups[cfg.static_spec()].append(i)

@@ -610,6 +610,10 @@ def validate_trace_npz(data) -> list[str]:
             )
         if row.size and not np.all(np.isfinite(row)):
             problems.append(f"{key} contains non-finite values")
+        elif row.size and np.any(row < 0):
+            # negative demand rows would silently invert injection gates
+            # downstream; reject them at the schema boundary
+            problems.append(f"{key} contains negative values")
     if "meta_json" in keys:
         try:
             meta = json.loads(str(np.asarray(data["meta_json"]).item()))
@@ -723,6 +727,20 @@ def resolve_source(source: "TrafficSourceLike", n_epochs: int) -> EpochDemand:
                 f"source {type(source).__name__} produced leaf {f!r} with "
                 f"shape {leaf.shape} dtype {leaf.dtype}; EpochDemand needs "
                 f"({n_epochs},) float32"
+            )
+        # value gate: a NaN/inf or negative demand row fed to the sim
+        # would silently poison injection gates and every KF observation
+        # downstream — reject it here, at the ONE resolution path
+        row = np.asarray(leaf)
+        if not np.all(np.isfinite(row)):
+            raise ValueError(
+                f"source {type(source).__name__} produced non-finite demand "
+                f"in leaf {f!r}"
+            )
+        if np.any(row < 0):
+            raise ValueError(
+                f"source {type(source).__name__} produced negative demand "
+                f"in leaf {f!r}"
             )
     return demand
 

@@ -72,25 +72,51 @@ class PredictorPolicy(NamedTuple):
     one of these).
     """
 
-    kind: Array       # () int32 in [0, 5) — see PREDICTORS
-    ema_alpha: Array  # () float32 — EMA smoothing factor
-    threshold: Array  # () float32 — binarization threshold (paper: 0.0)
+    kind: Array            # () int32 in [0, 5) — see PREDICTORS
+    ema_alpha: Array       # () float32 — EMA smoothing factor
+    threshold: Array       # () float32 — binarization threshold (paper: 0.0)
+    guard: Array           # () bool — self-healing gate armed (DESIGN.md §16)
+    nis_threshold: Array   # () float32 — innovation-gate NIS reject level
+    watchdog_limit: Array  # () int32 — consecutive rejects before unhealthy
+    cov_limit: Array       # () float32 — tr(P) divergence-watchdog ceiling
 
 
 def predictor_policy(
-    name: str = "kf", ema_alpha: float = 0.5, threshold: float = 0.0
+    name: str = "kf",
+    ema_alpha: float = 0.5,
+    threshold: float = 0.0,
+    guard: bool = False,
+    nis_threshold: float = 50.0,
+    watchdog_limit: int = 3,
+    cov_limit: float = 1e4,
 ) -> PredictorPolicy:
-    """Build the traced selector for one predictor by name."""
+    """Build the traced selector for one predictor by name.
+
+    `guard=True` arms the self-healing layer (innovation gate + divergence
+    watchdog + covariance reset); with the default `guard=False` every
+    gated `where` selects the unguarded value, so the emitted state and
+    signal are bitwise those of the pre-guard implementation.
+    """
     if name not in PREDICTORS:
         raise ValueError(
             f"unknown predictor {name!r}; expected one of {sorted(PREDICTORS)}"
         )
     if not 0.0 < ema_alpha <= 1.0:
         raise ValueError(f"ema_alpha={ema_alpha} outside (0, 1]")
+    if nis_threshold <= 0.0:
+        raise ValueError(f"nis_threshold={nis_threshold} must be positive")
+    if watchdog_limit < 1:
+        raise ValueError(f"watchdog_limit={watchdog_limit} must be >= 1")
+    if cov_limit <= 0.0:
+        raise ValueError(f"cov_limit={cov_limit} must be positive")
     return PredictorPolicy(
         kind=jnp.int32(PREDICTORS[name]),
         ema_alpha=jnp.float32(ema_alpha),
         threshold=jnp.float32(threshold),
+        guard=jnp.asarray(bool(guard)),
+        nis_threshold=jnp.float32(nis_threshold),
+        watchdog_limit=jnp.int32(watchdog_limit),
+        cov_limit=jnp.float32(cov_limit),
     )
 
 
@@ -99,12 +125,19 @@ class PredictorState(NamedTuple):
 
     kf: kalman.KalmanState  # x (1,), p (1, 1)
     ema: Array              # () float32 — EMA of the mean observation
+    reject_run: Array       # () int32 — consecutive innovation-gate rejects
+    healthy: Array          # () bool — watchdog verdict after this epoch;
+    #                         the allocator's degraded-mode fallback reads it
+    #                         (always True when the guard is disarmed)
 
 
 def init_state(dtype=jnp.float32) -> PredictorState:
     """Zero state — the KF member is exactly `kalman.init_state(1)`."""
     return PredictorState(
-        kf=kalman.init_state(1, dtype=dtype), ema=jnp.zeros((), dtype)
+        kf=kalman.init_state(1, dtype=dtype),
+        ema=jnp.zeros((), dtype),
+        reject_run=jnp.int32(0),
+        healthy=jnp.asarray(True),
     )
 
 
@@ -118,6 +151,10 @@ class KFInternals(NamedTuple):
     cov_trace: Array   # () tr(P_k) — posterior uncertainty
     x_pred: Array      # () one-step demand prediction A x_k (the signal's
                        #    pre-binarization value for the KF member)
+    nis: Array         # () normalized innovation squared of the epoch
+    rejected: Array    # () int32 {0,1} — innovation gate coasted this epoch
+    reset: Array       # () int32 {0,1} — covariance reset fired this epoch
+    healthy: Array     # () int32 {0,1} — watchdog verdict (1 = healthy)
 
 
 def step_probed(
@@ -132,12 +169,54 @@ def step_probed(
     computes (the gain recomputation CSEs against the measurement
     update), so the (state, signal) pair is bitwise that of `step` —
     which is in fact implemented as this function minus the internals.
+
+    Self-healing layer (DESIGN.md §16), armed by `pp.guard`:
+
+      * innovation gate — an epoch whose observation is non-finite or
+        whose NIS exceeds `pp.nis_threshold` is REJECTED: the filter
+        coasts on the a-priori state (the time update still ran, so
+        uncertainty keeps growing) instead of ingesting the corruption.
+      * divergence watchdog — `pp.watchdog_limit` consecutive rejects,
+        or a posterior covariance trace that is non-finite or above
+        `pp.cov_limit`, marks the filter UNHEALTHY; the allocator reads
+        `PredictorState.healthy` and falls back to the fair split.
+      * covariance reset — on the epoch the reject run first hits the
+        limit (or on a bad covariance), P snaps back to the init prior
+        and any non-finite state components are zeroed, so the filter
+        re-converges from scratch once observations clean up.
+
+    Every guard effect routes through `jnp.where(pp.guard, ...)`: with
+    the guard disarmed the emitted state, signal, and legacy internals
+    are bitwise those of the unguarded step.
     """
     kf_post, kf_prior, innovation = kalman.step(kf_params, state.kf, z)
     zbar = jnp.mean(z)
     ema = pp.ema_alpha * zbar + (1.0 - pp.ema_alpha) * state.ema
 
-    x_pred = kalman.one_step_prediction(kf_params, kf_post)[0]
+    # --- innovation gate ---------------------------------------------------
+    nis = kalman.innovation_nis(kf_params, kf_prior, z)
+    z_finite = jnp.all(jnp.isfinite(z))
+    # NaN NIS compares False against the threshold, hence the explicit
+    # finiteness term: a NaN observation must always reject.
+    reject = pp.guard & (~z_finite | (nis > pp.nis_threshold))
+    kf_x = jnp.where(reject, kf_prior.x, kf_post.x)
+    kf_p = jnp.where(reject, kf_prior.p, kf_post.p)
+
+    # --- divergence watchdog + covariance reset ----------------------------
+    reject_run = jnp.where(reject, state.reject_run + 1, jnp.int32(0))
+    cov_tr = jnp.trace(kf_p)
+    cov_bad = ~jnp.isfinite(cov_tr) | (cov_tr > pp.cov_limit)
+    run_bad = reject_run >= pp.watchdog_limit
+    do_reset = pp.guard & ((reject_run == pp.watchdog_limit) | cov_bad)
+    n = kf_params.state_dim
+    kf_x = jnp.where(
+        do_reset, jnp.where(jnp.isfinite(kf_x), kf_x, 0.0), kf_x
+    )
+    kf_p = jnp.where(do_reset, jnp.eye(n, dtype=kf_p.dtype), kf_p)
+    healthy = ~pp.guard | ~(run_bad | cov_bad)
+    kf_state = kalman.KalmanState(x=kf_x, p=kf_p)
+
+    x_pred = kalman.one_step_prediction(kf_params, kf_state)[0]
     sig_kf = kalman.binarize(x_pred, pp.threshold)
     sig_ema = kalman.binarize(ema, pp.threshold)
     sig_last = kalman.binarize(zbar, pp.threshold)
@@ -148,10 +227,17 @@ def step_probed(
     internals = KFInternals(
         innovation=innovation,
         gain=kalman.kalman_gain(kf_params, kf_prior)[0],
-        cov_trace=jnp.trace(kf_post.p),
+        cov_trace=jnp.trace(kf_state.p),
         x_pred=x_pred,
+        nis=nis,
+        rejected=reject.astype(jnp.int32),
+        reset=do_reset.astype(jnp.int32),
+        healthy=healthy.astype(jnp.int32),
     )
-    return PredictorState(kf=kf_post, ema=ema), signal, internals
+    new_state = PredictorState(
+        kf=kf_state, ema=ema, reject_run=reject_run, healthy=healthy
+    )
+    return new_state, signal, internals
 
 
 def step(

@@ -89,9 +89,11 @@ COUNTER_FIELDS = (
 )
 N_COUNTERS = len(COUNTER_FIELDS)
 
-# per-cycle xs rows (int / float blocks)
-XI_CYCLE, XI_SA, XI_GATE, XI_ACTIVE, XI_DEST = range(5)
-XI_ROWS = 5
+# per-cycle xs rows (int / float blocks); XI_MCOK carries the per-epoch MC
+# fault mask (DESIGN.md §16) — R-padded then S-tiled like every lane row, and
+# consumed on the first 128 lanes only (garbage tiles masked by ntype)
+XI_CYCLE, XI_SA, XI_GATE, XI_ACTIVE, XI_DEST, XI_MCOK = range(6)
+XI_ROWS = 6
 XF_UPHASE, XF_UGEN = range(2)
 XF_ROWS = 2
 # per-run policy rows (subnet-resolved / per-node)
@@ -320,12 +322,20 @@ def _s_slices(d: LaneDims, x: Array):
 # stage twins — each mirrors one `sim.cycle_body` stage over lanes
 # ---------------------------------------------------------------------------
 
-def mc_service_lanes(d: LaneDims, mc: Array, mcq: Array, ntype: Array):
+def mc_service_lanes(
+    d: LaneDims, mc: Array, mcq: Array, ntype: Array,
+    mc_ok: Array | None = None,
+):
     """MC service tick: timers, head request -> staging (cycle_body stage 1).
 
     Returns the six updated `mc` rows; the queue head peek is a Q-step
     one-hot sum (head is always in [0, Q), so it equals the dense
     take_along_axis gather exactly).
+
+    `mc_ok` (1, 128) bool is the MC-stall fault mask (DESIGN.md §16): a
+    False lane freezes service (timer, staging and dequeue all hold)
+    while the queue keeps filling — the lane twin of the dense engine's
+    `can_serve & mc_ok` gate.  None behaves as all-True.
     """
     i32 = jnp.int32
     is_mc = ntype == NT_MC
@@ -334,6 +344,8 @@ def mc_service_lanes(d: LaneDims, mc: Array, mcq: Array, ntype: Array):
     svalid = mc[MC_SVALID:MC_SVALID + 1] != 0
 
     can_serve = is_mc & (count > 0) & ~svalid
+    if mc_ok is not None:
+        can_serve = can_serve & mc_ok
     timer = jnp.where(
         can_serve, jnp.maximum(mc[MC_TIMER:MC_TIMER + 1] - 1, 0),
         mc[MC_TIMER:MC_TIMER + 1],
@@ -620,6 +632,7 @@ def cycle_step_lanes(
     gate = xi[XI_GATE:XI_GATE + 1] != 0
     active = xi[XI_ACTIVE:XI_ACTIVE + 1] != 0
     dests = xi[XI_DEST:XI_DEST + 1]
+    mc_ok = xi[XI_MCOK:XI_MCOK + 1, :LANES_R] != 0
     u_ph = xf[XF_UPHASE:XF_UPHASE + 1]
     u_gen = xf[XF_UGEN:XF_UGEN + 1]
 
@@ -646,7 +659,7 @@ def cycle_step_lanes(
 
     # ---- 1. MC service
     mc_head, mc_count, mc_timer, svalid, sdst, scls = mc_service_lanes(
-        d, st.mc, st.mcq, ntype
+        d, st.mc, st.mcq, ntype, mc_ok
     )
 
     # ---- 2. route/arbitrate every subnet
@@ -869,8 +882,17 @@ def cycle_xs(
     sa_all: Array,      # (E,) int32
     active_all: Array,  # (E, S) bool
     rep_gate: Array,    # (E,) bool
+    router_ok: Array | None = None,  # (R,) bool — epoch fault mask
+    mc_ok: Array | None = None,      # (R,) bool — epoch fault mask
 ):
-    """Per-cycle scan xs in lane layout: (E, XI_ROWS, S*64) + (E, XF_ROWS, 128)."""
+    """Per-cycle scan xs in lane layout: (E, XI_ROWS, S*64) + (E, XF_ROWS, 128).
+
+    The epoch-constant fault masks (DESIGN.md §16) ride the xs rows:
+    `router_ok` ANDs into the XI_ACTIVE row (a browned-out router grants
+    nothing in any subnet; padded lanes carry 0, which is inert — they
+    never hold valid heads), `mc_ok` becomes the XI_MCOK row.  None
+    behaves as all-True.
+    """
     E = cycles.shape[0]
     L = d.lanes_sr
     i32 = jnp.int32
@@ -878,12 +900,22 @@ def cycle_xs(
     def b_sr(x):
         return jnp.broadcast_to(x.astype(i32)[:, None], (E, L))
 
+    def r_row(x):  # (R,) -> (L,) lane row: pad to R_PAD, tile over subnets
+        return jnp.tile(jnp.pad(x.astype(i32), (0, R_PAD - d.R)), d.S)
+
     dest_rows = jnp.tile(
         jnp.pad(dests_all.astype(i32), ((0, 0), (0, R_PAD - d.R))), (1, d.S)
     )
     act_rows = jnp.repeat(active_all.astype(i32), R_PAD, axis=1)
+    if router_ok is not None:
+        act_rows = act_rows * r_row(router_ok)[None, :]
+    mcok_src = (
+        jnp.ones((d.R,), i32) if mc_ok is None else mc_ok
+    )
+    mcok_rows = jnp.broadcast_to(r_row(mcok_src)[None, :], (E, L))
     xi = jnp.stack(
-        [b_sr(cycles), b_sr(sa_all), b_sr(rep_gate), act_rows, dest_rows],
+        [b_sr(cycles), b_sr(sa_all), b_sr(rep_gate), act_rows, dest_rows,
+         mcok_rows],
         axis=1,
     )
     u_ph = jnp.broadcast_to(

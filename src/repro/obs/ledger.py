@@ -117,12 +117,45 @@ def jsonl_path(bench_path: str) -> str:
                         "LEDGER_noc.jsonl")
 
 
+def _append_jsonl_atomic(rec: dict, path: str) -> None:
+    """Crash-safe JSONL mirror append: rewrite via temp file + atomic rename.
+
+    A plain `open(..., "a")` interrupted mid-write leaves a truncated
+    final line that poisons every later `check_bench` parse of the
+    mirror.  Instead the existing content plus the new line are written
+    to a temp file in the same directory and `os.replace`d over the
+    mirror — readers see either the old file or the new one, never a
+    torn line.  One retry absorbs a transient OSError (e.g. a racing
+    scanner holding the file on some platforms)."""
+    existing = ""
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = f.read()
+        if existing and not existing.endswith("\n"):
+            # a previously torn tail line: drop it rather than corrupt
+            # the new row by gluing onto it
+            existing = existing[:existing.rfind("\n") + 1]
+    line = json.dumps(rec, sort_keys=True) + "\n"
+    tmp = path + ".tmp"
+    for attempt in (0, 1):
+        try:
+            with open(tmp, "w") as f:
+                f.write(existing + line)
+            os.replace(tmp, path)
+            return
+        except OSError:
+            if attempt:
+                raise
+
+
 def append(rec: dict, path: str) -> dict:
     """Stamp, validate, and append `rec` to the bench array at `path`.
 
     Returns the stamped record. Raises ValueError instead of writing a
     row that fails the schema — a malformed committed row would turn the
-    check_bench gate red for every later PR.
+    check_bench gate red for every later PR.  The JSONL mirror write is
+    atomic (temp file + rename) so an interrupted run cannot leave a
+    truncated line.
     """
     rec = dict(rec)
     for field, value in run_stamp().items():
@@ -140,6 +173,5 @@ def append(rec: dict, path: str) -> dict:
     with open(path, "w") as f:
         json.dump(records, f, indent=2)
         f.write("\n")
-    with open(jsonl_path(path), "a") as f:
-        f.write(json.dumps(rec, sort_keys=True) + "\n")
+    _append_jsonl_atomic(rec, jsonl_path(path))
     return rec

@@ -59,7 +59,18 @@ class SimTrace(NamedTuple):
     kf_x_pred: Array      # (E,)   float32  one-step demand prediction
     # realized (normalized) observation vector the filter consumed —
     # kf_x_pred[e] vs z_obs[e+1] is the prediction-vs-realized pairing
+    # (z_obs records the POST-corruption vector under telemetry faults:
+    # what the filter actually saw)
     z_obs: Array          # (E, 3) float32
+    # fault + self-healing channels (DESIGN.md §16): the fault->reject->
+    # reset->recover chain, one sample per epoch
+    kf_nis: Array         # (E,)   float32 normalized innovation squared
+    kf_rejected: Array    # (E,)   int32 {0,1} innovation gate coasted
+    kf_reset: Array       # (E,)   int32 {0,1} covariance reset fired
+    kf_healthy: Array     # (E,)   int32 {0,1} watchdog verdict (0 => the
+    #                       allocator ran the fair-split fallback)
+    faults_active: Array  # (E,)   int32 suppressed fabric elements +
+    #                       telemetry-corruption flag this epoch
 
 
 def summarize_trace(trace: SimTrace) -> dict:
@@ -67,6 +78,7 @@ def summarize_trace(trace: SimTrace) -> dict:
     import numpy as np
 
     occ = np.asarray(trace.occ_sum)
+    healthy = np.asarray(trace.kf_healthy)
     return {
         "epochs": int(occ.shape[0]),
         "occ_sum_total": int(occ.sum()),
@@ -77,4 +89,8 @@ def summarize_trace(trace: SimTrace) -> dict:
             np.sqrt(np.mean(np.square(np.asarray(trace.kf_innovation))))
         ),
         "kf_cov_trace_last": float(np.asarray(trace.kf_cov_trace)[-1]),
+        "kf_rejected_total": int(np.asarray(trace.kf_rejected).sum()),
+        "kf_reset_total": int(np.asarray(trace.kf_reset).sum()),
+        "fallback_epochs": int((healthy == 0).sum()),
+        "fault_epochs": int((np.asarray(trace.faults_active) > 0).sum()),
     }

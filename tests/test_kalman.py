@@ -79,6 +79,90 @@ def test_normalize_observations_range():
     np.testing.assert_allclose(z, [-1.0, 0.0, 1.0], atol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# innovation NIS (the self-healing gate's statistic, DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def test_innovation_nis_matches_direct_formula():
+    params = kalman.paper_params()
+    state = kalman.init_state(1)
+    z = jnp.asarray([0.3, -0.2, 0.5])
+    _, prior, _ = kalman.step(params, state, z)
+    nis = float(kalman.innovation_nis(params, prior, z))
+    h, p = np.asarray(params.h), np.asarray(prior.p)
+    s = h @ p @ h.T + np.asarray(params.r)
+    nu = np.asarray(z) - h @ np.asarray(prior.x)
+    assert nis == pytest.approx(float(nu @ np.linalg.solve(s, nu)), rel=1e-5)
+    assert nis >= 0.0
+
+
+def test_innovation_nis_grows_with_surprise():
+    params = kalman.paper_params()
+    state = kalman.init_state(1)
+    _, prior, _ = kalman.step(params, state, jnp.zeros(3))
+    small = float(kalman.innovation_nis(params, prior, jnp.full((3,), 0.1)))
+    spike = float(kalman.innovation_nis(params, prior, jnp.full((3,), 8.0)))
+    assert spike > small
+    assert spike > 50.0  # the default gate threshold flags a +8 spike
+
+
+def test_innovation_nis_nan_observation_compares_false():
+    """NaN z gives NaN NIS, and NaN > threshold is False — which is why
+    the simulator's innovation gate carries an explicit finiteness term
+    (predictor.step_probed) instead of relying on the comparison."""
+    params = kalman.paper_params()
+    state = kalman.init_state(1)
+    nis = kalman.innovation_nis(params, state, jnp.full((3,), jnp.nan))
+    assert not bool(jnp.isfinite(nis))
+    assert not bool(nis > 50.0)
+
+
+# ---------------------------------------------------------------------------
+# numerical robustness at the process/measurement-noise extremes
+# (deterministic counterparts of the hypothesis properties below)
+# ---------------------------------------------------------------------------
+
+EXTREME_QR = [(1e-12, 1e-12), (1e-12, 1e6), (1e6, 1e-12), (1e6, 1e6)]
+
+
+@pytest.mark.parametrize("q,r", EXTREME_QR)
+def test_state_finite_under_extreme_noise(q, r):
+    """x and P stay finite (and P positive) across 50 steps of alternating
+    saturated observations at both q/r extremes."""
+    params = kalman.paper_params(q=q, r=r)
+    state = kalman.init_state(1)
+    for t in range(50):
+        z = jnp.full((3,), 1.0 if t % 2 == 0 else -1.0)
+        state, _, _ = kalman.step(params, state, z)
+    assert np.all(np.isfinite(np.asarray(state.x)))
+    assert np.all(np.isfinite(np.asarray(state.p)))
+    assert float(state.p[0, 0]) > 0.0
+
+
+@pytest.mark.parametrize("q,r", EXTREME_QR)
+def test_state_finite_on_zero_variance_stream(q, r):
+    """A constant (zero-variance) observation stream must not degenerate
+    the covariance to 0 or NaN."""
+    params = kalman.paper_params(q=q, r=r)
+    state = kalman.init_state(1)
+    for _ in range(100):
+        state, _, _ = kalman.step(params, state, jnp.full((3,), 0.7))
+    assert np.all(np.isfinite(np.asarray(state.x)))
+    assert float(state.p[0, 0]) > 0.0
+
+
+def test_constant_saturated_counters_converge():
+    """Counters pinned at the normalization ceiling (z = +1 forever): the
+    estimate converges to the saturated value and stays finite."""
+    params = kalman.paper_params()
+    state = kalman.init_state(1)
+    for _ in range(200):
+        state, _, _ = kalman.step(params, state, jnp.ones(3))
+    x = float(state.x[0])
+    assert np.isfinite(x)
+    assert x == pytest.approx(1.0, abs=0.05)
+
+
 if hypothesis is not None:
 
     @hypothesis.given(
@@ -114,6 +198,30 @@ if hypothesis is not None:
         zbar = float(jnp.mean(z))
         lo, hi = min(0.0, zbar), max(0.0, zbar)
         assert lo - 1e-5 <= float(post.x[0]) <= hi + 1e-5
+
+    @hypothesis.given(
+        log_q=st.floats(-12, 6),
+        log_r=st.floats(-12, 6),
+        z0=st.floats(-1, 1),
+    )
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_property_state_finite_at_noise_extremes(log_q, log_r, z0):
+        """For ANY q, r in [1e-12, 1e6] driven by a zero-variance stream
+        (saturation included at |z0| = 1): x and P stay finite, P stays
+        positive, and the NIS statistic the self-healing gate consumes is
+        finite and non-negative."""
+        params = kalman.paper_params(q=10.0 ** log_q, r=10.0 ** log_r)
+        state = kalman.init_state(1)
+        z = jnp.full((3,), np.float32(z0))
+        prior = state
+        for _ in range(20):
+            state, prior, _ = kalman.step(params, state, z)
+        assert np.all(np.isfinite(np.asarray(state.x)))
+        assert np.all(np.isfinite(np.asarray(state.p)))
+        assert float(state.p[0, 0]) > 0.0
+        nis = float(kalman.innovation_nis(params, prior, z))
+        assert np.isfinite(nis)
+        assert nis > -1e-3  # quadratic form, up to f32 round-off
 
 else:
 

@@ -11,6 +11,7 @@ Pins the probe contract from three sides:
 """
 import dataclasses
 import json
+import os
 
 import jax
 import numpy as np
@@ -143,6 +144,46 @@ def test_ledger_probe_rejects_bad_rows(tmp_path):
     future = dict(legacy, ledger_version=ledger.LEDGER_VERSION + 1,
                   git_sha="x", device_kind="cpu")
     assert ledger.validate_row(future) != []
+
+
+def test_ledger_mirror_append_is_atomic(tmp_path):
+    """The JSONL mirror is rewritten via temp file + os.replace, and a torn
+    (non-newline-terminated) tail line left by a crashed writer is dropped
+    instead of being glued onto the next row."""
+    bench = tmp_path / "BENCH_noc.json"
+    mirror = tmp_path / "LEDGER_noc.jsonl"
+    rec = {"bench": "noc_obs", "timestamp": "t1", "backend": "cpu"}
+    ledger.append(dict(rec), path=str(bench))
+    with open(mirror, "a") as f:
+        f.write('{"bench": "torn')  # crashed writer: partial, no newline
+    ledger.append(dict(rec, timestamp="t2"), path=str(bench))
+    rows = [json.loads(line) for line in mirror.read_text().splitlines()]
+    assert [r["timestamp"] for r in rows] == ["t1", "t2"]
+    assert not (tmp_path / "LEDGER_noc.jsonl.tmp").exists()
+
+
+def test_ledger_mirror_retries_once_on_oserror(tmp_path, monkeypatch):
+    """One transient OSError on the atomic rename is absorbed; a second
+    consecutive failure propagates."""
+    bench = tmp_path / "BENCH_noc.json"
+    rec = {"bench": "noc_obs", "timestamp": "t1", "backend": "cpu"}
+    real_replace = os.replace
+    fails = {"left": 1}
+
+    def flaky(src, dst):
+        if fails["left"] > 0:
+            fails["left"] -= 1
+            raise OSError("transient")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(ledger.os, "replace", flaky)
+    ledger.append(dict(rec), path=str(bench))
+    mirror = tmp_path / "LEDGER_noc.jsonl"
+    assert len(mirror.read_text().splitlines()) == 1
+
+    fails["left"] = 2  # both attempts fail -> the error surfaces
+    with pytest.raises(OSError):
+        ledger.append(dict(rec, timestamp="t2"), path=str(bench))
 
 
 def test_ledger_probe_config_hash_stable():

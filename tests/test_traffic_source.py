@@ -159,6 +159,35 @@ class TestResolveSource:
         with pytest.raises(ValueError, match="per-epoch profile leaf"):
             resolve_source(prof, N)
 
+    def test_rejects_non_finite_demand_values(self):
+        """A NaN/inf demand row is stopped at the resolution boundary —
+        silently feeding it to the simulator would poison every counter
+        (and, unguarded, the KF state) downstream."""
+
+        class Poisoned:
+            def epoch_demand(self, n_epochs):
+                demand = PROFILES["PATH"].epoch_demand(n_epochs)
+                row = np.asarray(demand.cpu_rate).copy()
+                row[1] = np.nan
+                return demand._replace(cpu_rate=row)
+
+        with pytest.raises(ValueError, match="non-finite demand"):
+            resolve_source(Poisoned(), N)
+
+    def test_rejects_negative_demand_values(self):
+        """Rates and probabilities are non-negative by construction; a
+        negative row can only come from a buggy or corrupted source."""
+
+        class Negative:
+            def epoch_demand(self, n_epochs):
+                demand = PROFILES["PATH"].epoch_demand(n_epochs)
+                row = np.asarray(demand.gpu_rate_hi).copy()
+                row[0] = -0.5
+                return demand._replace(gpu_rate_hi=row)
+
+        with pytest.raises(ValueError, match="negative demand"):
+            resolve_source(Negative(), N)
+
     def test_materialize_shim_matches_resolve_source(self):
         """The deprecated pre-§15 entrypoint stays value-identical."""
         _rows_equal(materialize("SHIFT_PATH_BFS", N),
@@ -338,11 +367,35 @@ class TestTraceSchemaValidation:
         problems = "; ".join(validate_trace_npz(payload))
         assert "expected (T,)" in problems and "not valid JSON" in problems
 
+    def test_negative_rows_flagged(self):
+        payload = self._valid_payload(T=4)
+        bad = np.zeros(4, np.float32)
+        bad[1] = -0.25
+        payload["demand_gpu_rate_hi"] = bad
+        problems = "; ".join(validate_trace_npz(payload))
+        assert "negative" in problems
+
     def test_real_file_validates_via_np_load(self, tmp_path):
         path = tmp_path / "t.npz"
         _ramp_trace(T=3).save(path)
         with np.load(path, allow_pickle=False) as data:
             assert validate_trace_npz(data) == []
+
+    def test_hand_corrupted_npz_rejected(self, tmp_path):
+        """Regression: a trace file corrupted ON DISK (negative demand in
+        one row, inf in another) must fail validation — a replay driven by
+        it would otherwise launder the corruption into results."""
+        path = tmp_path / "t.npz"
+        _ramp_trace(T=4).save(path)
+        with np.load(path, allow_pickle=False) as data:
+            payload = {k: np.array(data[k]) for k in data.files}
+        payload["demand_cpu_rate"][2] = -1.0
+        payload["demand_p_enter"][0] = np.inf
+        corrupted = tmp_path / "corrupted.npz"
+        np.savez(corrupted, **payload)
+        with np.load(corrupted, allow_pickle=False) as data:
+            problems = "; ".join(validate_trace_npz(data))
+        assert "negative" in problems and "non-finite" in problems
 
     def test_save_never_pickles(self, tmp_path):
         """meta with nested structures still loads under allow_pickle=False."""
