@@ -21,6 +21,13 @@ DESIGN.md §16) into every row a driver sweeps: drivers splat
 `fault_overrides(args)` into their `run(**overrides)` call, and since
 `faults` is an `NoCConfig` field carried as traced data, the faulty grid
 still shares the healthy grid's one compiled program.
+
+``--placement NAME`` (placement scenarios, `placement.PLACEMENTS`) and
+``--topology WxH`` (non-paper mesh grids) follow the same pattern
+(DESIGN.md §17): `placement_overrides(args)` / `topology_overrides(args)`
+splat into `run(**overrides)` with the same precedence rule — the CLI
+value overrides any per-spec value.  Placement is traced data (shared
+program); topology is structural (its own compile, like ``--backend``).
 """
 from __future__ import annotations
 
@@ -62,6 +69,15 @@ def build_parser(
                     help="inject a registered fault scenario "
                          "(repro.core.noc.faults.FAULTS, e.g. FLAP_BFS) "
                          "into every swept row; default: healthy fabric")
+    ap.add_argument("--placement", metavar="NAME", default=None,
+                    help="apply a registered placement scenario "
+                         "(repro.core.noc.placement.PLACEMENTS, e.g. "
+                         "GPU_NEAR_MC) to every swept row; default: the "
+                         "static paper layout")
+    ap.add_argument("--topology", metavar="WxH", default=None,
+                    help="run on a WxH mesh instead of the paper's 6x6 "
+                         "(e.g. 4x4, 8x8; validated against the MC rows, "
+                         "capped at 64 routers)")
     if trace:
         ap.add_argument("--trace", metavar="F.npz", default=None,
                         help="drive the figure with a recorded demand trace "
@@ -93,6 +109,56 @@ def fault_overrides(args) -> dict:
     lookup_faults(name)
     print(f"# --faults: injecting fault scenario {name!r} into every row")
     return {"faults": name}
+
+
+def placement_overrides(args) -> dict:
+    """Config overrides for ``--placement`` ({} when the flag is absent).
+
+    Mirrors `fault_overrides` precedence exactly: `sweep` forwards the
+    override to every row's `NoCConfig`, beating any per-spec value; the
+    name is validated eagerly (with close-match suggestions)."""
+    name = getattr(args, "placement", None)
+    if not name:
+        return {}
+    from repro.core.noc.placement import lookup_placement
+
+    lookup_placement(name)
+    print(f"# --placement: applying placement scenario {name!r} to every row")
+    return {"placement": name}
+
+
+def topology_overrides(args) -> dict:
+    """Config overrides for ``--topology WxH`` ({} when absent).
+
+    Parses "WxH" into `NoCConfig(width=..., height=...)` and validates the
+    grid eagerly (`topology.validate_topology_args`, against the default
+    MC count) so an impossible mesh fails at the CLI."""
+    spec = getattr(args, "topology", None)
+    if not spec:
+        return {}
+    try:
+        w_s, h_s = spec.lower().split("x")
+        width, height = int(w_s), int(h_s)
+    except ValueError:
+        raise SystemExit(
+            f"--topology expects WxH (e.g. 6x6, 4x8), got {spec!r}"
+        ) from None
+    from repro.core.noc.sim import NoCConfig
+    from repro.core.noc.topology import validate_topology_args
+
+    validate_topology_args(width, height, NoCConfig().n_mc)
+    print(f"# --topology: running every row on a {width}x{height} mesh")
+    return {"width": width, "height": height}
+
+
+def shared_overrides(args) -> dict:
+    """Every cross-cutting override in one splat: --faults, --placement,
+    --topology.  The keys are disjoint by construction."""
+    return {
+        **fault_overrides(args),
+        **placement_overrides(args),
+        **topology_overrides(args),
+    }
 
 
 def registered_trace(args) -> str | None:

@@ -64,8 +64,8 @@ def _fresh_jit(fn):
     shared-cache path instead silently reads ~1x and buries the regression
     this harness exists to track.
     """
-    def point(stc, mp, profile, seed, state0, faults):
-        return fn(stc, mp, profile, seed, state0, faults)
+    def point(stc, mp, profile, seed, state0, faults, placement):
+        return fn(stc, mp, profile, seed, state0, faults, placement)
 
     return jax.jit(point, static_argnums=0)
 
@@ -85,7 +85,8 @@ def time_serial_seed_style(cfgs, profs) -> float:
         stc = cfg.static_spec(padded=False)
         _block(fresh(stc, cfg.mode_policy(padded=False),
                      resolve_source(prof, stc.n_epochs), cfg.seed,
-                     sim.init_sim_state(stc), sim._run_faults(None, stc)))
+                     sim.init_sim_state(stc), sim._run_faults(None, stc),
+                     sim._run_placement(None, stc)))
     return time.perf_counter() - t0
 
 

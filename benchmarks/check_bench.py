@@ -54,6 +54,12 @@ committed it must keep showing the guarded KF >= unguarded KF and >=
 always_off under every fault scenario, a bitwise-free healthy guard, and
 a single-trace fault x guard grid.
 
+So does the `noc_placement` row (benchmarks/fig_placement.py,
+DESIGN.md §17) via `check_placement_row`: once committed it must keep
+showing joint (bandwidth + relocation) control >= bandwidth-only mean
+GPU IPC on its gate scenario, a bitwise-free disarmed placement lever,
+and a single-trace control x placement grid.
+
     PYTHONPATH=src python -m benchmarks.check_bench [--grid smoke|full]
 
 Exit code 0 = within tolerance, 1 = regression (message says which gate).
@@ -295,6 +301,44 @@ def check_faults_row(records: list) -> list:
     return failures
 
 
+def check_placement_row(records: list) -> list:
+    """Tolerate-then-gate the committed `noc_placement` record.
+
+    Absent record -> tolerated (the placement-control bench has never
+    been run on this checkout); present record -> it must document the
+    placement-layer contract (DESIGN.md §17): joint control >=
+    bandwidth-only mean GPU IPC on the gate scenario, the identity pair
+    (bandwidth control with vs without a carried placement stream)
+    bitwise-identical, and the control x placement grid single-trace.
+    """
+    rows = [r for r in records if r.get("bench") == "noc_placement"]
+    if not rows:
+        print("noc_placement: no committed record yet — tolerated "
+              "(run benchmarks.fig_placement non-smoke to add one)")
+        return []
+    row = rows[-1]
+    failures = []
+    if row.get("traces", 1) != 1:
+        failures.append(
+            f"placement regression: committed noc_placement row traced "
+            f"simulate {row.get('traces')}x (contract: 1)"
+        )
+    if row.get("joint_beats_bandwidth") is not True:
+        failures.append(
+            "placement regression: committed noc_placement row no longer "
+            "shows joint control >= bandwidth-only mean GPU IPC on "
+            f"{row.get('gate_scenario')!r} (margins: {row.get('margins')})"
+        )
+    if row.get("identity_bitwise") is not True:
+        failures.append(
+            "placement regression: committed noc_placement row's "
+            "bandwidth-control run carrying a placement stream was not "
+            "bitwise-equal to the no-stream run (a disarmed lever must "
+            "be free)"
+        )
+    return failures
+
+
 def check(rec: dict, baseline: dict, min_speedup: float, frac: float,
           min_steady: float = DEFAULT_MIN_STEADY,
           steady_frac: float = DEFAULT_STEADY_FRAC,
@@ -375,6 +419,7 @@ def main(argv=None) -> int:
     failures += check_ablation(records)
     failures += check_trace_replay_row(records)
     failures += check_faults_row(records)
+    failures += check_placement_row(records)
     failures += check_pallas_row(records)
     failures += check_ledger_schema(records)
     failures += check_obs_row(records)

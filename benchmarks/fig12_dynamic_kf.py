@@ -52,7 +52,7 @@ def main(argv=None):
     tr = profiling.profiled_run(
         args.profile,
         lambda: run(workload=workload, devices=args.devices,
-                    backend=args.backend, **_cli.fault_overrides(args)),
+                    backend=args.backend, **_cli.shared_overrides(args)),
         label="fig12",
     )
     print("epoch,fair_gpu_ipc,kf_gpu_ipc,kf_signal,applied_config")

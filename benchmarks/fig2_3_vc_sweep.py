@@ -53,7 +53,7 @@ def main(argv=None):
     results = profiling.profiled_run(
         args.profile,
         lambda: run(devices=args.devices, backend=args.backend,
-                    workloads=workloads, **_cli.fault_overrides(args)),
+                    workloads=workloads, **_cli.shared_overrides(args)),
         label="fig2_3",
     )
     print("workload,ratio,gpu_ipc,gpu_ipc_std,cpu_ipc,cpu_ipc_std,avg_latency")

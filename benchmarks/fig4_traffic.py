@@ -56,7 +56,7 @@ def main(argv=None):
     tr = profiling.profiled_run(
         args.profile,
         lambda: run(workload=workload, devices=args.devices,
-                    backend=args.backend, **_cli.fault_overrides(args)),
+                    backend=args.backend, **_cli.shared_overrides(args)),
         label="fig4",
     )
     print("epoch,gpu_inj_rate,gpu_ipc,gpu_stall_icnt,gpu_stall_dram,cpu_push")

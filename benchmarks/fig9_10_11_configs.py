@@ -49,7 +49,7 @@ def main(argv=None):
     results = profiling.profiled_run(
         args.profile,
         lambda: run(devices=args.devices, backend=args.backend,
-                    workloads=workloads, **_cli.fault_overrides(args)),
+                    workloads=workloads, **_cli.shared_overrides(args)),
         label="fig9_10_11",
     )
     print("workload,mode,gpu_ipc,gpu_ipc_std,cpu_ipc,avg_latency,kf_on_frac")

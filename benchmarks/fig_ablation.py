@@ -148,7 +148,7 @@ def main(argv=None):
     from repro.obs import profiling
 
     n_epochs, overrides = 120, {"backend": args.backend}
-    overrides.update(_cli.fault_overrides(args))
+    overrides.update(_cli.shared_overrides(args))
     if args.smoke:
         seeds, scenarios = SMOKE["seeds"], SMOKE["scenarios"]
     else:

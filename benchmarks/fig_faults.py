@@ -226,6 +226,8 @@ def main(argv=None):
 
         lookup_faults(args.faults)
         fault_set = (args.faults,)
+    overrides.update(_cli.placement_overrides(args))
+    overrides.update(_cli.topology_overrides(args))
 
     res = profiling.profiled_run(
         args.profile,

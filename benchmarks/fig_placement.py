@@ -1,0 +1,314 @@
+"""Placement-control ablation: bandwidth vs relocation vs joint levers
+(DESIGN.md §17).
+
+The paper's KF pulls one lever — the VC bandwidth split.  With node
+identity refactored into traced per-epoch data (`placement.py`), the same
+hysteresis signal can also *relocate compute*: swap CPU tiles sitting
+next to memory controllers with far-away GPU tiles (the SHIFT-style
+co-design the roadmap calls for).  This driver ablates which lever(s) the
+applied config drives, over the scenario library:
+
+  * bandwidth  — the paper's controller: VC boosts only, the static
+                 checkerboard layout (placement lever disarmed);
+  * placement  — relocation only: the boost plan is `GPU_NEAR_MC`
+                 (GPU tiles ranked to the MC-adjacent ring), VC split
+                 stays at fair;
+  * joint      — both levers armed by the same KF signal.
+
+All three controls are `ModePolicy` leaves and the placement plan rides
+the epoch scan as traced data, so the whole control x scenario x seed
+grid — plus an identity (placement=None) pair — shares the simulator's
+ONE compiled program (`--gate` asserts it).  The identity pair pins the
+refactor contract: a bandwidth-control row CARRYING the GPU_NEAR_MC
+stream must be BITWISE equal to a row with no placement stream at all,
+because a disarmed lever may not perturb a single bit.
+
+Gate: joint's mean GPU IPC >= bandwidth-only's on the gate scenario
+(MIX_PATH_STO_BFS — the phase-mix program whose demand migrations the
+relocation lever exploits), the identity pair bitwise, and the grid
+single-trace.  Non-smoke runs also
+capture a probed joint run (relocation timeline: `place_moves_total`)
+and append a `noc_placement` ledger row that `benchmarks/check_bench.py`
+tolerates-until-present and then gates on.
+
+    PYTHONPATH=src python -m benchmarks.fig_placement [--smoke] [--gate]
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.fig_ablation import KF_Q_ABLATION
+from repro.core.allocator import CONTROLS, PolicyConfig
+from repro.core.noc import sim
+from repro.core.noc.sim import (
+    NoCConfig,
+    SweepSpec,
+    summarize_seeds,
+    sweep,
+)
+from repro.obs.probes import summarize_trace
+
+ARMS = CONTROLS  # ("bandwidth", "placement", "joint")
+# The boost-slot relocation plan every armed row carries: GPU tiles ranked
+# onto the MC-adjacent ring while the KF signal holds.
+PLACEMENT = "GPU_NEAR_MC"
+# The gate binds where the relocation lever's win actually lives: the
+# mixed phase program (PATH <-> STO <-> BFS), whose between-phase demand
+# shifts are what compute relocation exploits.  On the pure-shift
+# scenarios the joint margin is sub-quantum negative (toggle churn eats
+# the layout gain); those margins are still reported, not gated.
+GATE_SCENARIO = "MIX_PATH_STO_BFS"
+SCENARIOS = (
+    "SHIFT_PATH_BFS",
+    "SHIFT_SMOOTH",
+    "RAMP_LIB",
+    "MIX_PATH_STO_BFS",
+    "BURSTS_BFS",
+)
+SEEDS = (0, 1, 2)
+# The identity-pair control cell's label in the results table.
+IDENTITY = "identity"
+
+# Smoke trims seeds and the scenario set, not the simulated dims — the
+# boost windows only open after the policy's warmup (20 of 120 epochs at
+# the default epoch_len), so shrinking n_epochs would ablate a grid in
+# which the placement lever never fires.
+SMOKE = dict(seeds=(0,), scenarios=(GATE_SCENARIO,))
+
+
+def _arm_spec(arm: str, scenario: str, seed: int) -> SweepSpec:
+    return SweepSpec(
+        "kf", scenario, seed=seed, placement=PLACEMENT, control=arm,
+    )
+
+
+def _bitwise_equal(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y), equal_nan=True)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def run(
+    n_epochs: int = 120,
+    seeds: tuple[int, ...] = SEEDS,
+    scenarios: tuple[str, ...] = SCENARIOS,
+    devices: int | None = None,
+    probe: bool = True,
+    **overrides,
+) -> dict:
+    """Sweep scenarios x control arms x seeds (+ identity pair); summarize.
+
+    Returns the per-cell summary table, the identity-pair bitwise verdict,
+    the sweep's trace count (captured BEFORE the probed run — probes-on is
+    deliberately its own compiled program), and one probed joint run's
+    relocation counters on the gate scenario.
+    """
+    overrides.setdefault("kf_q", KF_Q_ABLATION)
+    points = [(sc, arm, s) for sc in scenarios for arm in ARMS for s in seeds]
+    specs = [_arm_spec(arm, sc, s) for sc, arm, s in points]
+    # Identity pair: same bandwidth control, NO placement stream.  Rides
+    # the same dispatch; must be bitwise-equal to the armed-but-disarmed
+    # bandwidth rows above.
+    id_specs = [
+        SweepSpec("kf", GATE_SCENARIO, seed=s, placement=None,
+                  control="bandwidth")
+        for s in seeds
+    ]
+    sim.reset_trace_count()
+    rows = sweep(specs + id_specs, n_epochs=n_epochs, devices=devices,
+                 **overrides)
+    traces = sim.trace_count()
+    id_rows = rows[len(specs):]
+
+    by_cell: dict[tuple[str, str], list] = {}
+    for (sc, arm, _), row in zip(points, rows):
+        by_cell.setdefault((sc, arm), []).append(row)
+
+    policy = overrides.get("policy", PolicyConfig())
+    epoch_len = overrides.get("epoch_len", 500)
+    warmup_epochs = min(math.ceil(policy.warmup / epoch_len), n_epochs - 1)
+    table = {
+        sc: {
+            arm: summarize_seeds(by_cell[(sc, arm)],
+                                 warmup_epochs=warmup_epochs)
+            for arm in ARMS
+        }
+        for sc in scenarios
+    }
+
+    # Identity contract: a disarmed placement lever may not perturb a bit —
+    # bandwidth control carrying the GPU_NEAR_MC stream vs no stream at
+    # all, per seed, across the full SimResult.
+    identity_bitwise = all(
+        _bitwise_equal(a, b)
+        for a, b in zip(by_cell[(GATE_SCENARIO, "bandwidth")], id_rows)
+    )
+
+    probes = {}
+    if probe:
+        cfg = NoCConfig(
+            mode="kf", n_epochs=n_epochs, seed=seeds[0],
+            placement=PLACEMENT, control="joint", **overrides,
+        )
+        _, trace = sim.simulate_with_trace(cfg, GATE_SCENARIO)
+        s = summarize_trace(trace)
+        probes["joint"] = {
+            k: s[k] for k in ("place_moves_total", "epochs")
+        }
+
+    return {
+        "table": table,
+        "traces": traces,
+        "identity_bitwise": identity_bitwise,
+        "probes": probes,
+        "warmup_epochs": warmup_epochs,
+    }
+
+
+def control_verdict(table: dict, scenarios: tuple[str, ...]) -> dict:
+    """Joint-vs-{bandwidth, placement} GPU-IPC margins per scenario.
+
+    The gate only binds on GATE_SCENARIO (joint >= bandwidth there); the
+    other margins are reported for the record.  Margins compare UNROUNDED
+    values (rounding only the report): the gate must catch a sub-quantum
+    ordering violation.
+    """
+    margins = {}
+    for sc in scenarios:
+        cells = table[sc]
+        j = cells["joint"]["gpu_ipc"]
+        margins[sc] = {
+            "vs_bandwidth": round(j - cells["bandwidth"]["gpu_ipc"], 6),
+            "vs_placement": round(j - cells["placement"]["gpu_ipc"], 6),
+        }
+    gate_cells = table.get(GATE_SCENARIO)
+    joint_beats_bandwidth = (
+        gate_cells is not None
+        and gate_cells["joint"]["gpu_ipc"]
+        >= gate_cells["bandwidth"]["gpu_ipc"]
+    )
+    return {"margins": margins,
+            "joint_beats_bandwidth": joint_beats_bandwidth}
+
+
+def record(res: dict, grid: dict, verdict: dict) -> dict:
+    return {
+        "bench": "noc_placement",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "gate_scenario": GATE_SCENARIO,
+        "placement": PLACEMENT,
+        "grid": grid,
+        "traces": res["traces"],
+        "identity_bitwise": res["identity_bitwise"],
+        "gpu_ipc": {
+            sc: {arm: round(cells[arm]["gpu_ipc"], 6) for arm in ARMS}
+            for sc, cells in res["table"].items()
+        },
+        "probes": res["probes"],
+        **verdict,
+    }
+
+
+def main(argv=None):
+    from benchmarks import _cli
+
+    ap = _cli.build_parser(
+        __doc__,
+        smoke_help="one seed on the gate scenario at full simulated dims "
+                   "(see SMOKE); no BENCH_noc.json append",
+        gate_help="exit 1 unless joint >= bandwidth-only mean GPU IPC on "
+                  "the gate scenario, the identity pair is bitwise, and "
+                  "the grid ran single-trace",
+        trace=False,
+    )
+    args = ap.parse_args(argv)
+    from repro.obs import profiling
+
+    n_epochs, overrides = 120, {"backend": args.backend}
+    if args.smoke:
+        seeds, scenarios = SMOKE["seeds"], SMOKE["scenarios"]
+    else:
+        seeds, scenarios = SEEDS, SCENARIOS
+    overrides.update(_cli.fault_overrides(args))
+    overrides.update(_cli.topology_overrides(args))
+    if args.placement:
+        # here the shared flag swaps the plan under ablation rather than
+        # injecting it into every row (each row already carries one)
+        from repro.core.noc.placement import lookup_placement
+
+        lookup_placement(args.placement)
+        global PLACEMENT
+        PLACEMENT = args.placement
+        print(f"# --placement: ablating plan {PLACEMENT!r}")
+
+    res = profiling.profiled_run(
+        args.profile,
+        lambda: run(n_epochs=n_epochs, seeds=seeds, scenarios=scenarios,
+                    devices=args.devices, **overrides),
+        label="fig_placement",
+    )
+    print("scenario,control,gpu_ipc,gpu_ipc_std,cpu_ipc,avg_latency,"
+          "boost_frac")
+    for sc, cells in res["table"].items():
+        for arm, s in cells.items():
+            print(f"{sc},{arm},{s['gpu_ipc']:.4f},{s['gpu_ipc_std']:.4f},"
+                  f"{s['cpu_ipc']:.4f},{s['avg_latency']:.2f},"
+                  f"{s['kf_on_frac']:.2f}")
+
+    verdict = control_verdict(res["table"], scenarios)
+    print(f"# traces: {res['traces']} (contract: 1)")
+    print(f"# identity pair bitwise (disarmed lever is free): "
+          f"{res['identity_bitwise']}")
+    for sc, m in verdict["margins"].items():
+        print(f"# {sc}: joint margin vs bandwidth {m['vs_bandwidth']:+.4f},"
+              f" vs placement {m['vs_placement']:+.4f}")
+    p = res["probes"].get("joint", {})
+    if p:
+        print(f"# joint relocation timeline: {p['place_moves_total']} "
+              f"router-moves over {p['epochs']} epochs "
+              f"({GATE_SCENARIO}, seed {seeds[0]})")
+    print(f"# joint_beats_bandwidth: {verdict['joint_beats_bandwidth']} "
+          f"(mean GPU IPC on {GATE_SCENARIO})")
+
+    if not args.smoke:
+        from benchmarks.bench_sweep import BENCH_PATH, append_record
+
+        grid = {"scenarios": list(scenarios), "arms": list(ARMS),
+                "seeds": list(seeds), "n_epochs": n_epochs,
+                "kf_q": KF_Q_ABLATION}
+        rec = record(res, grid, verdict)
+        append_record(rec)
+        print(json.dumps(rec, indent=2))
+        print(f"appended noc_placement record to {BENCH_PATH}")
+
+    if args.gate:
+        failures = []
+        if res["traces"] != 1:
+            failures.append(f"placement grid traced simulate "
+                            f"{res['traces']}x (contract: the one shared "
+                            "program)")
+        if not res["identity_bitwise"]:
+            failures.append("bandwidth-control row carrying the placement "
+                            "stream is not bitwise-equal to the no-stream "
+                            "row (a disarmed lever must be free)")
+        if not verdict["joint_beats_bandwidth"]:
+            m = verdict["margins"][GATE_SCENARIO]["vs_bandwidth"]
+            failures.append(f"joint control lost to bandwidth-only on "
+                            f"{GATE_SCENARIO} (margin {m:+.6f})")
+        for f in failures:
+            print(f"PLACEMENT GATE: {f}", file=sys.stderr)
+        if failures:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

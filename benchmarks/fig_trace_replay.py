@@ -180,7 +180,7 @@ def main(argv=None):
         lambda: ablation_run(n_epochs=120, seeds=seeds,
                              scenarios=(source,), devices=args.devices,
                              backend=args.backend,
-                             **_cli.fault_overrides(args)),
+                             **_cli.shared_overrides(args)),
         label="fig_trace_replay",
     )
     print("source,predictor,gpu_ipc,gpu_ipc_std,cpu_ipc,avg_latency,"

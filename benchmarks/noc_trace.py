@@ -40,10 +40,12 @@ META_KEYS = ("workload", "mode", "n_epochs", "epoch_len", "seed", "backend")
 def capture(workload: str = "SHIFT_PATH_BFS", mode: str = "kf",
             n_epochs: int = 24, epoch_len: int = 200, seed: int = 0,
             backend: str = "ref", faults: str | None = None,
-            guard: bool = False) -> dict:
+            guard: bool = False, placement: str | None = None,
+            control: str = "bandwidth") -> dict:
     """Probes-on run -> flat dict of numpy arrays + run metadata."""
     cfg = sim.NoCConfig(mode=mode, n_epochs=n_epochs, epoch_len=epoch_len,
-                        seed=seed, faults=faults, guard=guard)
+                        seed=seed, faults=faults, guard=guard,
+                        placement=placement, control=control)
     res, trace = sim.simulate_with_trace(cfg, workload, backend=backend)
     cap = {f: np.asarray(v) for f, v in zip(sim.SimTrace._fields, trace)}
     cap["kf_signal"] = np.asarray(res.kf_signal)
@@ -84,13 +86,15 @@ def render_ascii(cap: dict) -> list:
     depth_est = max(float(frac.max()), 1e-9)
     E, S = frac.shape
     has_faults = "faults_active" in cap  # pre-§16 captures lack the channels
+    has_place = "place_cls" in cap       # pre-§17 captures lack the channel
     lines = [
         f"# workload={cap['workload']} mode={cap['mode']} "
         f"epochs={cap['n_epochs']} epoch_len={cap['epoch_len']} "
         f"seed={cap['seed']} backend={cap['backend']}",
         "#  ep |occ/subnet| grant  deny mcqMax | z(dram,push,icnt) "
         "innov0   gain0  x_pred sig cfg"
-        + (" | flt rej rst ok     nis" if has_faults else ""),
+        + (" | flt rej rst ok     nis" if has_faults else "")
+        + (" |  mv gpu" if has_place else ""),
     ]
     for e in range(E):
         heat = "".join(
@@ -109,6 +113,19 @@ def render_ascii(cap: dict) -> list:
                 f" {'y' if cap['kf_healthy'][e] else 'n':>2s}"
                 f" {float(cap['kf_nis'][e]):7.2f}"
             )
+        place_cols = ""
+        if has_place:
+            # relocation timeline (DESIGN.md §17): tiles whose class moved
+            # vs the previous epoch's plan, and the GPU tile count ('M'
+            # marks a migration epoch)
+            moves = (
+                0 if e == 0
+                else int((cap["place_cls"][e] != cap["place_cls"][e - 1]).sum())
+            )
+            n_gpu = int((cap["place_cls"][e] == 1).sum())
+            place_cols = (
+                f" | {('M' + str(moves)) if moves else '.':>3s} {n_gpu:3d}"
+            )
         lines.append(
             f"{e:5d} |{heat:^10s}| {int(cap['arb_grant'][e].sum()):6d}"
             f" {int(cap['arb_deny'][e].sum()):5d}"
@@ -120,6 +137,7 @@ def render_ascii(cap: dict) -> list:
             f" {int(cap['kf_signal'][e]):3d}"
             f" {int(cap['applied_config'][e]):3d}"
             + fault_cols
+            + place_cols
         )
     return lines
 
@@ -127,6 +145,7 @@ def render_ascii(cap: dict) -> list:
 def render_csv(cap: dict) -> list:
     """Machine-readable per-epoch rows (same quantities as the ASCII view)."""
     has_faults = "faults_active" in cap  # pre-§16 captures lack the channels
+    has_place = "place_cls" in cap       # pre-§17 captures lack the channel
     cols = (
         ["epoch", "occ_sum", "arb_grant", "arb_deny", "mcq_sum", "mcq_max"]
         + [f"z_{i}" for i in range(3)]
@@ -136,6 +155,7 @@ def render_csv(cap: dict) -> list:
            "gpu_ipc", "avg_latency"]
         + (["faults_active", "kf_nis", "kf_rejected", "kf_reset",
             "kf_healthy"] if has_faults else [])
+        + (["place_moves", "place_gpu_tiles"] if has_place else [])
     )
     lines = [",".join(cols)]
     for e in range(int(cap["n_epochs"])):
@@ -152,6 +172,9 @@ def render_csv(cap: dict) -> list:
             + ([int(cap["faults_active"][e]), float(cap["kf_nis"][e]),
                 int(cap["kf_rejected"][e]), int(cap["kf_reset"][e]),
                 int(cap["kf_healthy"][e])] if has_faults else [])
+            + ([0 if e == 0 else
+                int((cap["place_cls"][e] != cap["place_cls"][e - 1]).sum()),
+                int((cap["place_cls"][e] == 1).sum())] if has_place else [])
         )
         lines.append(",".join(str(v) for v in row))
     return lines
@@ -260,6 +283,14 @@ def main(argv=None) -> int:
     ap.add_argument("--guard", action="store_true",
                     help="arm the self-healing KF guard (innovation gate +"
                          " watchdog + fair-split fallback)")
+    ap.add_argument("--placement", metavar="NAME", default=None,
+                    help="apply a registered placement scenario "
+                         "(DESIGN.md §17) and render the relocation-timeline"
+                         " columns")
+    ap.add_argument("--control", default="bandwidth",
+                    choices=("bandwidth", "placement", "joint"),
+                    help="which levers the KF signal may pull: VC bandwidth"
+                         " boosts, placement relocation, or both")
     ap.add_argument("--csv", action="store_true",
                     help="emit CSV rows instead of the ASCII timeline")
     ap.add_argument("--save", metavar="F.npz", help="save the capture")
@@ -283,7 +314,8 @@ def main(argv=None) -> int:
         cap = capture(workload=args.workload, mode=args.mode,
                       n_epochs=args.epochs, epoch_len=args.epoch_len,
                       seed=args.seed, backend=args.backend,
-                      faults=args.faults, guard=args.guard)
+                      faults=args.faults, guard=args.guard,
+                      placement=args.placement, control=args.control)
     if args.save:
         save(cap, args.save)
     lines = render_csv(cap) if args.csv else render_ascii(cap)

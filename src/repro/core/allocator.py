@@ -115,6 +115,15 @@ class ModePolicy(NamedTuple):
     member (KF / EMA / last-value / always-on / always-off) emits the
     epoch-boundary signal.
 
+    Since the placement subsystem (DESIGN.md §17) the hysteresis machine
+    drives TWO levers, each behind its own traced enable: ``bw_enable``
+    lets the applied config reconfigure the VC partition + SA pattern (the
+    paper's bandwidth lever) and ``place_enable`` lets it relocate compute
+    between the placement stream's base/boosted plans (the SHIFT-style
+    lever).  bandwidth-only / placement-only / joint control is therefore
+    one compiled program — `mode_policy(..., control=...)` just flips these
+    two scalars.
+
     Leaves may carry a leading batch dimension when stacked.
     """
 
@@ -128,6 +137,12 @@ class ModePolicy(NamedTuple):
     sub_enabled: Array  # (S,) bool — live rows of the padded subnet axis
     sub_is_req: Array   # (S,) bool — request-direction subnets (rest: reply)
     predictor: PredictorPolicy  # traced predictor-bank selection (§12)
+    bw_enable: Array    # () bool — config drives the VC/SA bandwidth lever (§17)
+    place_enable: Array  # () bool — config drives the compute-placement lever
+
+
+# control levers the applied configuration may drive (DESIGN.md §17)
+CONTROLS = ("bandwidth", "placement", "joint")
 
 
 def mode_policy(
@@ -140,6 +155,7 @@ def mode_policy(
     predictor: str = "kf",
     ema_alpha: float = 0.5,
     guard: bool = False,
+    control: str = "bandwidth",
 ) -> ModePolicy:
     """Build the traced policy tensors for one of the paper's modes.
 
@@ -162,7 +178,17 @@ def mode_policy(
     hysteresis machine is enabled, i.e. mode="kf").  ``guard`` arms that
     member's self-healing layer (innovation gate, divergence watchdog,
     covariance reset — DESIGN.md §16); disarmed it is bitwise inert.
+
+    ``control`` selects which lever(s) the applied config drives
+    (DESIGN.md §17): "bandwidth" (VC partition + SA pattern — the paper's
+    controller, and the bitwise-identity default), "placement" (compute
+    relocation between the placement stream's plans only), or "joint"
+    (both).  Pure traced data — all three compile to one program.
     """
+    if control not in CONTROLS:
+        raise ValueError(
+            f"unknown control {control!r}; expected one of {CONTROLS}"
+        )
     if n_subnets is None:
         n_subnets = 4 if mode == "4subnet" else 2
     if active_vcs is None:
@@ -214,15 +240,37 @@ def mode_policy(
         sub_is_req=sub_is_req,
         predictor=predictor_policy(predictor, ema_alpha=ema_alpha,
                                    guard=guard),
+        bw_enable=jnp.asarray(control != "placement"),
+        place_enable=jnp.asarray(control != "bandwidth"),
     )
 
 
 def class_vc_masks(policy: ModePolicy, config: Array) -> tuple[Array, Array]:
-    """Select the (V,) GPU/CPU VC masks for the applied configuration."""
-    boosted = config > 0
+    """Select the (V,) GPU/CPU VC masks for the applied configuration.
+
+    Gated on ``bw_enable`` (DESIGN.md §17): under placement-only control
+    the VC partition stays at the config-0 split no matter what the
+    hysteresis machine applied.  ``bw_enable`` defaults True, so
+    pre-placement programs select identical values."""
+    boosted = (config > 0) & policy.bw_enable
     gpu = jnp.where(boosted, policy.gpu_mask1, policy.gpu_mask0)
     cpu = jnp.where(boosted, policy.cpu_mask1, policy.cpu_mask0)
     return gpu, cpu
+
+
+def placement_class(
+    policy: ModePolicy, config: Array, cls0: Array, cls1: Array
+) -> Array:
+    """Select the (R,) node-class plan for the applied configuration.
+
+    The placement twin of `class_vc_masks` (DESIGN.md §17): while the
+    hysteresis machine holds a boosted config AND ``place_enable`` is set,
+    compute relocates to the placement stream's boosted plan ``cls1``;
+    otherwise it sits on the base plan ``cls0``.  The identity stream
+    carries ``cls0 == cls1``, so placement-free runs select bit-for-bit
+    the static layout either way."""
+    boosted = (config > 0) & policy.place_enable
+    return jnp.where(boosted, cls1, cls0)
 
 
 def apply_policy_gated(
@@ -271,9 +319,11 @@ def epoch_sa_prefs(policy: ModePolicy, config: Array, cycles: Array) -> Array:
     only after the inner cycle scan), so the whole epoch's switch-arbitration
     preference classes can be precomputed from the cycle numbers instead of
     branching per cycle: returns (len(cycles),) int32, -1 for round-robin.
+    The SA pattern is a bandwidth lever, so it rides ``bw_enable`` (§17).
     """
     pattern = sa_priority_pattern(config, cycles)
-    return jnp.where(policy.sa_enable, pattern, jnp.int32(-1))
+    return jnp.where(policy.sa_enable & policy.bw_enable, pattern,
+                     jnp.int32(-1))
 
 
 def vc_partition(config: Array, n_vcs: int = 4) -> tuple[Array, Array]:

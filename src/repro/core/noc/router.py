@@ -360,7 +360,13 @@ def inject_all(
 
 
 def device_tables(topo: Topology):
-    """Move topology tables onto device once per simulation."""
+    """Move topology tables onto device once per simulation.
+
+    Since the placement layer (DESIGN.md §17) the static `node_type`
+    table only seeds the physical `is_mc` mask — per-epoch node classes
+    come from the traced placement stream, and routing/neighbor tables
+    stay position-only (relocation moves a tile's CLASS, not its router).
+    """
     assert topo.n_routers <= 64, "meta packing assumes router ids fit 6 bits"
     return (
         jnp.asarray(topo.route),

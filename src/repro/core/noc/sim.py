@@ -70,6 +70,7 @@ from repro.core.allocator import (
     epoch_sa_prefs,
     init_policy_state,
     mode_policy,
+    placement_class,
 )
 from repro.core.allocator import degrade_policy
 from repro.core.noc import metrics
@@ -81,6 +82,11 @@ from repro.core.noc.faults import (
     FaultSourceLike,
     FaultStream,
     resolve_faults,
+)
+from repro.core.noc.placement import (
+    PlacementSourceLike,
+    PlacementStream,
+    resolve_placement,
 )
 from repro.core.noc.topology import make_topology
 from repro.obs.probes import ProbeConfig, SimTrace
@@ -145,6 +151,13 @@ class SimStatic:
     # bit-for-bit unchanged; probes on is its own single trace returning
     # (SimResult, SimTrace).
     probe: ProbeConfig = ProbeConfig()
+    # mesh geometry (DESIGN.md §17): the topology tables are shape-bearing,
+    # so grid dimensions are structural.  The paper grid (6x6, 8 MCs) is
+    # the default; any grid accepted by `topology.validate_topology_args`
+    # builds and runs (capped at 64 routers by the lane-metadata packing).
+    width: int = 6
+    height: int = 6
+    n_mc: int = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,8 +198,20 @@ class NoCConfig:
     # epoch scan's xs — faulty and healthy runs share one compiled program.
     guard: bool = False
     faults: FaultSourceLike = None
+    # compute-placement knobs (DESIGN.md §17) — both traced data, NOT
+    # SimStatic: `placement` is any `placement.PlacementSourceLike`
+    # (scenario name, PlacementSchedule, PlacementStream, or None = the
+    # identity/static layout) riding the epoch scan's xs; `control` picks
+    # which lever(s) the applied config drives — "bandwidth" (the paper's
+    # VC/SA controller), "placement" (relocation only), or "joint".
+    placement: PlacementSourceLike = None
+    control: str = "bandwidth"
     # flight recorder (repro.obs, DESIGN.md §14) — static, default off
     probe: ProbeConfig = ProbeConfig()
+    # mesh geometry (DESIGN.md §17) — structural; see SimStatic
+    width: int = 6
+    height: int = 6
+    n_mc: int = 8
 
     @property
     def n_subnets(self) -> int:
@@ -221,6 +246,9 @@ class NoCConfig:
             backend=self.backend,
             stamp_dtype=self.stamp_dtype,
             probe=self.probe,
+            width=self.width,
+            height=self.height,
+            n_mc=self.n_mc,
         )
 
     def mode_policy(self, padded: bool = True) -> ModePolicy:
@@ -229,7 +257,7 @@ class NoCConfig:
             self.mode, stc.n_vcs, self.static_gpu_vcs,
             n_subnets=stc.n_subnets, active_vcs=self.vcs_per_subnet,
             predictor=self.predictor, ema_alpha=self.ema_alpha,
-            guard=self.guard,
+            guard=self.guard, control=self.control,
         )
 
 
@@ -315,7 +343,7 @@ def init_sim_state(stc: SimStatic, batch: int | None = None):
     them: XLA then reuses the buffers in place instead of holding both the
     init and the first-iteration copy live.
     """
-    topo = make_topology()
+    topo = make_topology(stc.width, stc.height, stc.n_mc)
     R = topo.n_routers
     S, V, B = stc.n_subnets, stc.n_vcs, stc.buf_depth
 
@@ -384,6 +412,7 @@ def _simulate_impl(
     seed: Array,
     state0,
     faults: FaultStream,
+    placement: PlacementStream,
 ) -> SimResult:
     """Core jitted simulation.  ``profile`` arrives MATERIALIZED: every leaf
     is an (n_epochs,) float32 row (``traffic.materialize``), consumed by the
@@ -397,19 +426,26 @@ def _simulate_impl(
     threaded — a healthy run carries the identity stream, so faulty and
     healthy configurations share this ONE trace and the healthy values are
     bit-for-bit the pre-fault program's (every fault gate is an AND or a
-    mode-0 `where`)."""
+    mode-0 `where`).
+
+    ``placement`` too (DESIGN.md §17): per-epoch (R,) node-class plans
+    (`placement.resolve_placement`) riding the epoch scan's xs.  Node
+    identity — `is_gpu`/`is_cpu`/`node_cls`/`req_sub` and the injection
+    gates — is derived per epoch from the traced plan inside `epoch_body`
+    instead of from static topology constants, so relocated and static
+    runs share this ONE trace; the identity stream carries the topology's
+    own layout, making a static run's derived values bit-for-bit the
+    pre-placement program's.  MCs are physical and never relocate: `is_mc`
+    stays a static table and the virtual node type re-asserts it."""
     _trace_counter[0] += 1  # Python side effect: runs only at trace time
 
-    topo = make_topology()
+    topo = make_topology(stc.width, stc.height, stc.n_mc)
     route_t, nb_t, opp_t, ntype, mc_ids = rt.device_tables(topo)
     R = topo.n_routers
     S = stc.n_subnets
     V = stc.n_vcs
 
-    is_mc = ntype == 2
-    is_gpu = ntype == 1
-    is_cpu = ntype == 0
-    node_cls = jnp.where(is_gpu, 1, 0)  # class a node's own traffic belongs to
+    is_mc = ntype == 2  # static: MCs are physical, placement never moves them
     ar = jnp.arange(R)
 
     # Traced subnet structure (DESIGN.md §10): which rows of the padded
@@ -422,10 +458,10 @@ def _simulate_impl(
     sub_is_req = mp.sub_is_req               # (S,) bool
     sub_is_rep = sub_enabled & ~sub_is_req   # (S,) bool
     n_req_subs = jnp.sum(sub_is_req.astype(jnp.int32))
-    # request subnet of a node's own traffic; the reply subnet additionally
-    # depends on the requester's class when routing is class-segregated.
-    req_sub = jnp.where(fs, 2 * node_cls, 0)
     sub_ids = jnp.arange(S, dtype=jnp.int32)
+    # NB `is_gpu`/`is_cpu`/`node_cls`/`req_sub` are no longer derived here:
+    # they are per-epoch quantities computed in `epoch_body` from the traced
+    # placement plan (DESIGN.md §17).
 
     subnets0, mc0, outstanding0, backlog0 = state0
 
@@ -467,12 +503,9 @@ def _simulate_impl(
             width=topo.width, mc_service_period=stc.mc_service_period,
             mshr_limit=stc.mshr_limit, bcap=BCAP, stamp_mask=stamp_mask,
         )
-        route_rows, exists_rows, ntype_row = lanes.run_consts(lane_dims, topo)
-        req_match = (sub_ids[:, None] == req_sub[None, :]) & sub_enabled[:, None]
-        pol_sr, pol_r = lanes.policy_rows(
-            lane_dims, sub_enabled, sub_is_req, sub_is_rep, req_match,
-            fs, n_req_subs,
-        )
+        # the node-type row and the req_match-bearing policy rows are now
+        # per-epoch data (placement, DESIGN.md §17) — rebuilt in epoch_body
+        route_rows, exists_rows, _ = lanes.run_consts(lane_dims, topo)
 
     def make_want_rep(mc):
         """Want-matrix for staged MC replies (reply subnet of requester
@@ -486,8 +519,9 @@ def _simulate_impl(
 
     def epoch_body(carry, epoch_xs):
         # prof: this epoch's scalar-leaf profile; flt: this epoch's fault
-        # masks — link_ok (R, P), router_ok (R,), mc_ok (R,), telem ()s
-        epoch_key, prof, flt = epoch_xs
+        # masks — link_ok (R, P), router_ok (R,), mc_ok (R,), telem ()s;
+        # plc: this epoch's placement plans — cls0/cls1 (R,)
+        epoch_key, prof, flt, plc = epoch_xs
         subs, mc, phase, outst, backlog, policy, pred_state, cycle0 = carry
 
         # ---- epoch-invariant hoisting (DESIGN.md §11): `policy.config` is
@@ -499,6 +533,22 @@ def _simulate_impl(
         g_vec, c_vec = class_vc_masks(mp, config_idx)          # (V,)
         gpu_masks = jnp.broadcast_to(g_vec, (S, V))
         cpu_masks = jnp.broadcast_to(c_vec, (S, V))
+
+        # ---- traced node identity (DESIGN.md §17): the applied config
+        # selects between this epoch's base/boosted placement plans (gated
+        # on `place_enable`), and EVERY class-derived quantity follows.
+        # MC rows re-assert NT_MC — memory controllers are physical.  With
+        # the identity stream all of these select the static topology
+        # values bit-for-bit.
+        cls_e = placement_class(mp, config_idx, plc.cls0, plc.cls1)
+        ntype_e = jnp.where(is_mc, 2, cls_e)               # (R,) virtual type
+        is_gpu = ntype_e == 1
+        is_cpu = ntype_e == 0
+        node_cls = jnp.where(is_gpu, 1, 0)  # class a node's traffic belongs to
+        # request subnet of a node's own traffic; the reply subnet
+        # additionally depends on the requester's class under
+        # class-segregated routing.
+        req_sub = jnp.where(fs, 2 * node_cls, 0)
 
         # Epoch prologue: replies staged on the previous epoch's last cycle
         # inject under THIS epoch's masks.  The in-cycle merged inject is
@@ -635,7 +685,7 @@ def _simulate_impl(
 
             # ---- 4. source generation -> per-node source-queue depth
             phase = step_phase_u(prof, phase, u_ph)
-            rates = injection_rates(prof, ntype, phase)
+            rates = injection_rates(prof, ntype_e, phase)
             gen = (u_gen_c < rates) & ~is_mc  # == bernoulli(k_gen, rates)
             # push into the per-node source queue (drop + stall if full)
             can_push = gen & (bl_count < BCAP)
@@ -728,6 +778,16 @@ def _simulate_impl(
             # policy) is byte-for-byte the dense engine's code above/below.
             gm_rows, cm_rows = lanes.mask_rows(lane_dims, g_vec, c_vec)
             pr_rows = lanes.prof_rows(prof)
+            # placement lane rows (DESIGN.md §17): the node-type row and
+            # the req_match-bearing policy rows follow this epoch's plan
+            ntype_row = lanes.placement_rows(lane_dims, ntype_e)
+            req_match = (
+                (sub_ids[:, None] == req_sub[None, :]) & sub_enabled[:, None]
+            )
+            pol_sr, pol_r = lanes.policy_rows(
+                lane_dims, sub_enabled, sub_is_req, sub_is_rep, req_match,
+                fs, n_req_subs,
+            )
             xi, xf = lanes.cycle_xs(
                 lane_dims, cycles, u_phase, u_gen, dests_all, sa_all,
                 active_all, rep_gate,
@@ -848,7 +908,10 @@ def _simulate_impl(
                 + jnp.sum((~flt.mc_ok).astype(jnp.int32))
                 + (tm != 0).astype(jnp.int32)
             )
-            out = (out, (prb, kfi, z, faults_active))
+            # placement channel (DESIGN.md §17): the virtual node class
+            # applied this epoch — shared by every backend, so the
+            # relocation timeline is cross-engine congruent by construction
+            out = (out, (prb, kfi, z, faults_active, cls_e))
         return (subs, mc, phase, outst, backlog, policy, pred_state, cycle), out
 
     key0 = jax.random.PRNGKey(seed)
@@ -863,9 +926,11 @@ def _simulate_impl(
         predictor.init_state(),
         jnp.int32(0),
     )
-    _, outs = jax.lax.scan(epoch_body, carry0, (epoch_keys, profile, faults))
+    _, outs = jax.lax.scan(
+        epoch_body, carry0, (epoch_keys, profile, faults, placement)
+    )
     if probe_on:
-        outs, (prb, kfi, z_obs, faults_active) = outs
+        outs, (prb, kfi, z_obs, faults_active, place_cls) = outs
     gpu_ipc, cpu_ipc, avg_lat, sig, conf, cnt, inj, quota = outs
     result = SimResult(
         gpu_ipc=gpu_ipc,
@@ -895,6 +960,7 @@ def _simulate_impl(
         kf_reset=kfi.reset,
         kf_healthy=kfi.healthy,
         faults_active=faults_active,
+        place_cls=place_cls,
     )
     return result, trace
 
@@ -917,7 +983,7 @@ def _batch_jit():
     if _BATCH_JIT is None:
         donate = () if jax.default_backend() == "cpu" else (4,)
         _BATCH_JIT = jax.jit(
-            jax.vmap(_simulate_impl, in_axes=(None, 0, 0, 0, 0, 0)),
+            jax.vmap(_simulate_impl, in_axes=(None, 0, 0, 0, 0, 0, 0)),
             static_argnums=0,
             donate_argnums=donate,
         )
@@ -929,11 +995,19 @@ def _run_faults(source: FaultSourceLike, stc: SimStatic) -> FaultStream:
 
     The neighbor table makes link faults symmetric (a dead link is dead
     both ways — `faults.FaultSchedule.materialize`)."""
-    topo = make_topology()
+    topo = make_topology(stc.width, stc.height, stc.n_mc)
     return resolve_faults(
         source, stc.n_epochs, n_routers=topo.n_routers,
         neighbor=topo.neighbor, opposite=topo.opposite,
     )
+
+
+def _run_placement(
+    source: PlacementSourceLike, stc: SimStatic
+) -> PlacementStream:
+    """Lower a config's placement source against the run topology."""
+    topo = make_topology(stc.width, stc.height, stc.n_mc)
+    return resolve_placement(source, stc.n_epochs, topo)
 
 
 def simulate(
@@ -969,6 +1043,7 @@ def simulate(
         jnp.int32(cfg.seed),
         init_sim_state(stc),
         _run_faults(cfg.faults, stc),
+        _run_placement(cfg.placement, stc),
     )
 
 
@@ -1027,10 +1102,10 @@ def _sharded_jit(stc: SimStatic, mesh):
 
         from repro.dist import sharding as dist_sharding
 
-        batched = jax.vmap(_simulate_impl, in_axes=(None, 0, 0, 0, 0, 0))
+        batched = jax.vmap(_simulate_impl, in_axes=(None, 0, 0, 0, 0, 0, 0))
 
-        def shard_body(mp, prof, seeds, state0, flt):
-            return batched(stc, mp, prof, seeds, state0, flt)
+        def shard_body(mp, prof, seeds, state0, flt, plc):
+            return batched(stc, mp, prof, seeds, state0, flt, plc)
 
         spec = P(SWEEP_AXIS)
         # check_vma off: jax 0.4.37's replication checker mis-types the
@@ -1042,7 +1117,7 @@ def _sharded_jit(stc: SimStatic, mesh):
         _SHARD_JIT[key] = jax.jit(
             dist_sharding.shard_map(
                 shard_body, mesh=mesh,
-                in_specs=(spec, spec, spec, spec, spec), out_specs=spec,
+                in_specs=(spec,) * 6, out_specs=spec,
                 axis_names=(SWEEP_AXIS,), check_vma=False,
             ),
             donate_argnums=donate,
@@ -1112,6 +1187,10 @@ def simulate_batch(
     flt = jax.tree.map(
         lambda *xs: jnp.stack(xs), *[_run_faults(c.faults, stc) for c in cfgs]
     )
+    plc = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_run_placement(c.placement, stc) for c in cfgs],
+    )
 
     if devices is not None or mesh is not None:
         if mesh is None:
@@ -1120,11 +1199,11 @@ def simulate_batch(
             mesh = dist_sharding.sweep_mesh(devices)
         ndev = int(mesh.devices.size)
         padded_b = -(-B // ndev) * ndev
-        mp, prof, seeds, flt = (
-            _pad_rows(t, padded_b - B) for t in (mp, prof, seeds, flt)
+        mp, prof, seeds, flt, plc = (
+            _pad_rows(t, padded_b - B) for t in (mp, prof, seeds, flt, plc)
         )
         out = _sharded_jit(stc, mesh)(
-            mp, prof, seeds, init_sim_state(stc, padded_b), flt
+            mp, prof, seeds, init_sim_state(stc, padded_b), flt, plc
         )
         return _tree_rows(out, slice(0, B))
 
@@ -1133,15 +1212,17 @@ def simulate_batch(
     for lo in range(0, B, tile):
         sl = slice(lo, min(lo + tile, B))
         n = sl.stop - sl.start
-        mp_t, prof_t, seeds_t, flt_t = (
-            _tree_rows(t, sl) for t in (mp, prof, seeds, flt)
+        mp_t, prof_t, seeds_t, flt_t, plc_t = (
+            _tree_rows(t, sl) for t in (mp, prof, seeds, flt, plc)
         )
         if n < tile:  # pad the ragged tail by repeating row 0 (discarded)
-            mp_t, prof_t, seeds_t, flt_t = (
-                _pad_rows(t, tile - n) for t in (mp_t, prof_t, seeds_t, flt_t)
+            mp_t, prof_t, seeds_t, flt_t, plc_t = (
+                _pad_rows(t, tile - n)
+                for t in (mp_t, prof_t, seeds_t, flt_t, plc_t)
             )
         out = _batch_jit()(
-            stc, mp_t, prof_t, seeds_t, init_sim_state(stc, tile), flt_t
+            stc, mp_t, prof_t, seeds_t, init_sim_state(stc, tile), flt_t,
+            plc_t,
         )
         parts.append(_tree_rows(out, slice(0, n)))
     if len(parts) == 1:
@@ -1165,7 +1246,14 @@ class SweepSpec(NamedTuple):
     (DESIGN.md §16) — both traced data, so the whole fault x guard grid
     rides the same compiled program and batches into one dispatch.  A
     ``faults``/``guard`` key in `sweep`'s overrides (e.g. the shared
-    `--faults` CLI flag) takes precedence over the per-spec value."""
+    `--faults` CLI flag) takes precedence over the per-spec value.
+
+    ``placement`` names a registered placement scenario
+    (`placement.PLACEMENTS`, None = the identity/static layout) and
+    ``control`` picks which lever(s) the applied config drives
+    ("bandwidth" | "placement" | "joint" — DESIGN.md §17); both traced
+    data with the same override-precedence rule as ``faults``/``guard``
+    (the shared `--placement` CLI flag)."""
 
     mode: str
     workload: str
@@ -1174,6 +1262,8 @@ class SweepSpec(NamedTuple):
     predictor: str = "kf"
     faults: str | None = None
     guard: bool = False
+    placement: str | None = None
+    control: str = "bandwidth"
 
 
 # Tile size for sweep batches.  The paper sweeps (4 workloads x 3 ratios,
@@ -1211,6 +1301,8 @@ def sweep(
         kw = dict(overrides)
         kw.setdefault("faults", sp.faults)
         kw.setdefault("guard", sp.guard)
+        kw.setdefault("placement", sp.placement)
+        kw.setdefault("control", sp.control)
         cfg = NoCConfig(
             mode=sp.mode, static_gpu_vcs=sp.static_gpu_vcs, seed=sp.seed,
             predictor=sp.predictor, **kw,

@@ -8,6 +8,7 @@ Ports: 0=N, 1=E, 2=S, 3=W, 4=Local.  Router id r = y * W + x.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -72,12 +73,61 @@ def _neighbors(width: int, height: int) -> np.ndarray:
     return nb
 
 
+# Router ids are packed into lane metadata words (kernels/noc_cycle/lanes.py
+# uses a 6-bit source field, and the fused lane layout pads routers to 64
+# lanes), so any topology must fit in 64 routers.
+MAX_ROUTERS = 64
+
+
+def validate_topology_args(width: int, height: int, n_mc: int) -> None:
+    """Reject grids that cannot host the MC rows or the CPU/GPU tiling.
+
+    Raises ValueError with an actionable message instead of silently
+    mis-placing MCs (the old behavior backfilled colliding MC columns
+    from row 0, scrambling the placement).
+    """
+    for name, val in (("width", width), ("height", height), ("n_mc", n_mc)):
+        if not isinstance(val, int) or isinstance(val, bool):
+            raise ValueError(f"{name} must be an int, got {val!r}")
+    if width < 2 or height < 2:
+        raise ValueError(
+            f"mesh needs width >= 2 and height >= 2 (got {width}x{height}): "
+            "MCs live on distinct top and bottom rows and XY routing needs "
+            "both dimensions"
+        )
+    if n_mc < 1:
+        raise ValueError(f"n_mc must be >= 1, got {n_mc}")
+    # bottom row hosts the larger half of an odd split
+    if n_mc - n_mc // 2 > width:
+        raise ValueError(
+            f"n_mc={n_mc} does not fit on the top+bottom rows of a "
+            f"width-{width} mesh (max {2 * width}); widen the mesh or drop MCs"
+        )
+    if width * height - n_mc < 2:
+        raise ValueError(
+            f"{width}x{height} mesh with n_mc={n_mc} leaves "
+            f"{width * height - n_mc} non-MC tile(s); need >= 2 so both a GPU "
+            "and a CPU chiplet exist"
+        )
+    if width * height > MAX_ROUTERS:
+        raise ValueError(
+            f"{width}x{height} mesh has {width * height} routers; the packed "
+            f"lane layout caps at {MAX_ROUTERS} (6-bit router ids in lane "
+            "metadata). Use a smaller grid."
+        )
+
+
+@functools.lru_cache(maxsize=None)
 def make_topology(width: int = 6, height: int = 6, n_mc: int = 8) -> Topology:
     """Paper Table 1: 6x6 shared 2D mesh; 8 GDDR5 MCs; CPU/GPU chiplet tiles.
 
     MCs sit on the top and bottom rows (the usual GPGPU-sim placement);
     remaining tiles alternate GPU / CPU chiplets (14 + 14 on the 6x6).
+    Non-default grids are validated by `validate_topology_args` — with the
+    per-row MC count capped at `width`, the evenly-spread columns below are
+    always distinct, so the placement is exact (no silent backfilling).
     """
+    validate_topology_args(width, height, n_mc)
     n = width * height
     node_type = np.empty((n,), dtype=np.int32)
     # spread MCs evenly over top and bottom rows
@@ -87,13 +137,8 @@ def make_topology(width: int = 6, height: int = 6, n_mc: int = 8) -> Topology:
     mc_ids = sorted(
         {int(c) for c in top_cols} | {int((height - 1) * width + c) for c in bot_cols}
     )
-    # if rounding collided, fill from row 0 leftovers deterministically
-    i = 0
-    while len(mc_ids) < n_mc:
-        if i not in mc_ids:
-            mc_ids.append(i)
-        i += 1
-    mc_ids = np.asarray(sorted(mc_ids[:n_mc]), dtype=np.int32)
+    assert len(mc_ids) == n_mc, (width, height, n_mc, mc_ids)
+    mc_ids = np.asarray(mc_ids, dtype=np.int32)
 
     flip = 0
     for r in range(n):

@@ -163,7 +163,14 @@ def step_phase(profile: WorkloadProfile, phase: Array, key: Array) -> Array:
 def injection_rates(
     profile: WorkloadProfile, node_type: Array, phase: Array
 ) -> Array:
-    """Offered load (prob of generating a request this cycle) per node."""
+    """Offered load (prob of generating a request this cycle) per node.
+
+    ``node_type`` is TRACED data since the placement layer (DESIGN.md
+    §17): the simulator passes the per-epoch virtual class `ntype_e`
+    derived from the placement stream, so relocating a tile moves its
+    offered load with it; static runs pass rows that equal the topology
+    constants bit-for-bit.
+    """
     gpu_rate = jnp.where(phase == 1, profile.gpu_rate_hi, profile.gpu_rate_lo)
     rates = jnp.where(node_type == 1, gpu_rate, 0.0)          # GPU tiles
     rates = jnp.where(node_type == 0, profile.cpu_rate, rates)  # CPU tiles

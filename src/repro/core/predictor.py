@@ -34,6 +34,12 @@ Every predictor's state advances every epoch regardless of `kind` (the
 selection applies only to the emitted signal), which is what keeps the
 program branch-free; the extra EMA arithmetic is two fused scalar ops per
 epoch — noise next to the cycle scan.
+
+Since the placement layer (DESIGN.md §17) the emitted signal drives up to
+TWO levers: the VC bandwidth boost (`ModePolicy.bw_enable`) and compute
+relocation (`ModePolicy.place_enable` selecting the placement stream's
+boosted class plan).  The bank is lever-agnostic — it predicts demand;
+which levers the prediction pulls is the allocator's `control` setting.
 """
 from __future__ import annotations
 

@@ -826,6 +826,19 @@ def run_consts(d: LaneDims, topo: Topology):
     return jnp.asarray(route), jnp.asarray(exists), jnp.asarray(ntype)
 
 
+def placement_rows(d: LaneDims, ntype_e: Array) -> Array:
+    """Per-epoch node-type lane row from a traced placement (DESIGN.md §17).
+
+    The lane layout's node-type row was a run constant (`run_consts`);
+    with placement the virtual node type is per-epoch DATA, so the epoch
+    body rebuilds this (1, 128) row — padded lanes carry -1, exactly the
+    constant row's convention, so every `ntype == NT_*` compare in the
+    kernel stays false on padding.  Identity placement reproduces the
+    `run_consts` row bit-for-bit."""
+    pad = jnp.full((LANES_R - d.R,), -1, jnp.int32)
+    return jnp.concatenate([ntype_e.astype(jnp.int32), pad])[None, :]
+
+
 def policy_rows(
     d: LaneDims,
     sub_enabled: Array, sub_is_req: Array, sub_is_rep: Array,  # (S,) bool

@@ -71,6 +71,11 @@ class SimTrace(NamedTuple):
     #                       allocator ran the fair-split fallback)
     faults_active: Array  # (E,)   int32 suppressed fabric elements +
     #                       telemetry-corruption flag this epoch
+    # placement channel (DESIGN.md §17): the virtual node class applied
+    # each epoch (the placement plan the traced policy selected) — the
+    # relocation timeline `noc_trace` renders.  Appended LAST so older
+    # positional consumers of the fault channels keep their indices.
+    place_cls: Array      # (E, R) int32 node class per router (NT_* values)
 
 
 def summarize_trace(trace: SimTrace) -> dict:
@@ -93,4 +98,9 @@ def summarize_trace(trace: SimTrace) -> dict:
         "kf_reset_total": int(np.asarray(trace.kf_reset).sum()),
         "fallback_epochs": int((healthy == 0).sum()),
         "fault_epochs": int((np.asarray(trace.faults_active) > 0).sum()),
+        # total router-epochs whose node class differs from the previous
+        # epoch's plan: 0 on every identity-placement run
+        "place_moves_total": int(
+            (np.diff(np.asarray(trace.place_cls), axis=0) != 0).sum()
+        ),
     }
